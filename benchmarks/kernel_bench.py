@@ -1,0 +1,62 @@
+"""Kernel microbenchmarks (interpret mode on CPU — relative numbers only;
+the BlockSpec tiling targets TPU VMEM). Compares the Pallas pipeline with
+the pure-jnp oracle and the exact lax.top_k path."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _time(fn, *args, iters=3):
+    import jax
+    fn(*args)                      # compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def kernel_microbench():
+    import jax
+    import jax.numpy as jnp
+    from repro.core.compression import topk
+    from repro.kernels import ops, ref
+
+    rows = []
+    rng = np.random.RandomState(0)
+    for d in (1 << 16, 1 << 20):
+        g = jnp.asarray(rng.randn(d).astype(np.float32))
+        res = jnp.zeros(d)
+
+        us = _time(lambda g, r: ops.topk_compress(g, r, rate=0.01,
+                                                  interpret=True), g, res)
+        rows.append((f"pallas_topk_compress_d{d}", us, "interpret"))
+
+        exact = jax.jit(lambda g: topk(g, 0.01).dense())
+        rows.append((f"exact_lax_topk_d{d}", _time(exact, g), "oracle"))
+
+        mu = jnp.zeros(d)
+        us = _time(lambda w, m, gg: ops.momentum_update(
+            w, m, gg, lr=0.01, interpret=True), g, mu, g)
+        rows.append((f"pallas_fused_momentum_d{d}", us, "interpret"))
+
+        unfused = jax.jit(lambda w, m, gg: ref.ref_fused_momentum(
+            w, m, gg, lr=0.01))
+        rows.append((f"unfused_momentum_d{d}", _time(unfused, g, mu, g),
+                     "oracle"))
+    return rows
+
+
+def sync_crossover():
+    """δ-adaptive collective: analytic wire bytes per sync vs δ (documents
+    the sparse/dense crossover used by dist.collectives)."""
+    from repro.dist.collectives import all_gather_bytes, density_crossover
+    d, P = 100_000_000, 2
+    rows = []
+    for rate in (1e-4, 1e-3, 1e-2, density_crossover(P), 0.5, 1.0):
+        b = all_gather_bytes(d, P, rate)
+        rows.append((f"sync_wire_bytes_delta{rate:g}", 0.0,
+                     f"{b/1e6:.1f}MB"))
+    return rows

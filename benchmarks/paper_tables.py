@@ -1,0 +1,143 @@
+"""One benchmark per paper table/figure (Sec. 4), on the simulator with
+synthetic stand-in data. Each returns (name, us_per_call, derived) rows —
+us_per_call is the wall-clock per simulated round; `derived` carries the
+paper-comparable headline number."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _setup(noise=1.2, devices=5, samples=2000, seed=0):
+    import jax
+    from repro.core import compression as C
+    from repro.core.simulator import make_heterogeneous_devices
+    from repro.models.small import make_task
+    task = make_task("mlp_fmnist", num_samples=samples, test_samples=400,
+                     batch_size=32, noise=noise, seed=seed)
+    params = task.init_fn(jax.random.PRNGKey(seed))
+    flat, _ = C.flatten_pytree(params)
+    profiles = make_heterogeneous_devices(devices, flat.size * 32,
+                                          base_alpha=0.02, seed=seed)
+    return task, profiles
+
+
+def _sim(task, profiles, method, rounds=25, *, fixed_k=5, fixed_delta=0.1,
+         k_bounds=(1, 20), noniid=False, seed=0, plan_override=None):
+    from repro.core.factor import Plan
+    from repro.core.simulator import (AFLSimulator, DeviceSpec,
+                                      STRATEGY_FOR_METHOD, plan_devices)
+    from repro.data.partition import dirichlet_partition
+    if plan_override is not None:
+        k, delta = plan_override
+        specs = [DeviceSpec(p, Plan(k, delta, 0.0,
+                                    k * p.alpha + delta * p.beta, 0), "topk")
+                 for p in profiles]
+        strategy = "periodic"
+    else:
+        specs = plan_devices(profiles, method, 1.0, k_bounds=k_bounds,
+                             fixed_k=fixed_k, fixed_delta=fixed_delta)
+        strategy = STRATEGY_FOR_METHOD[method]
+    kw = {"strategy_kwargs": {"buffer_size": 3}} if method == "fedbuff" \
+        else {}
+    idx = None
+    if noniid:
+        idx = dirichlet_partition(task.dataset.labels, len(profiles),
+                                  alpha=1.0, seed=seed)
+    sim = AFLSimulator(task, specs, strategy, round_period=1.0, eta_l=0.05,
+                       seed=seed, client_indices=idx, **kw)
+    t0 = time.time()
+    h = sim.run(total_rounds=rounds, eval_every=2)
+    wall = time.time() - t0
+    return h, wall / max(1, rounds) * 1e6
+
+
+def fig1_motivation_grid():
+    """Fig. 1: rounds-to-target over a (k, δ) grid — the motivation dilemma.
+    derived = slowest/fastest convergence ratio (paper: up to ~3×/11×)."""
+    task, profiles = _setup()
+    target, cap = 0.70, 40
+    rows, grid = [], {}
+    total_us = []
+    for k in (2, 8, 20):
+        for delta in (0.005, 0.05, 0.5):
+            h, us = _sim(task, profiles, "grid", rounds=cap,
+                         plan_override=(k, delta))
+            r = next((rec.round for rec in h.records
+                      if rec.accuracy >= target), None)
+            grid[(k, delta)] = r
+            total_us.append(us)
+    finite = [v for v in grid.values() if v is not None]
+    if not finite:
+        return [("fig1_grid_rounds_ratio", np.mean(total_us), "n/a")]
+    # settings that never reach the target count as the round cap
+    worst = max(v if v is not None else cap for v in grid.values())
+    ratio = worst / max(1, min(finite))
+    detail = ";".join(f"k{k}d{d}={v}" for (k, d), v in grid.items())
+    return [("fig1_grid_rounds_ratio", np.mean(total_us),
+             f"{ratio:.1f}x [{detail}]")]
+
+
+def fig2_time_to_accuracy():
+    """Fig. 2: elapsed simulated time to target accuracy, 5 methods.
+    derived = FedLuck's average time saving vs baselines (paper: 55%)."""
+    task, profiles = _setup()
+    target = 0.75
+    out, times = [], {}
+    for m in ("fedluck", "fedper", "fedbuff", "fedasync", "fedavg_topk"):
+        h, us = _sim(task, profiles, m, rounds=40)
+        t = h.time_to_accuracy(target)
+        times[m] = t
+        out.append((f"fig2_time_to_acc_{m}", us,
+                    f"{t:.2f}s" if t else "n/a"))
+    base = [v for k, v in times.items() if k != "fedluck" and v]
+    if times["fedluck"] and base:
+        saving = 1 - times["fedluck"] / np.mean(base)
+        out.append(("fig2_fedluck_time_saving", 0.0, f"{saving:.0%}"))
+    return out
+
+
+def fig3_comm_consumption():
+    """Fig. 3: communication (Gbit) to target accuracy, 5 methods.
+    derived = FedLuck's average comm saving vs baselines (paper: 56%)."""
+    task, profiles = _setup()
+    target = 0.75
+    out, bits = [], {}
+    for m in ("fedluck", "fedper", "fedbuff", "fedasync", "fedavg_topk"):
+        h, us = _sim(task, profiles, m, rounds=40)
+        b = h.bits_to_accuracy(target)
+        bits[m] = b
+        out.append((f"fig3_comm_{m}", us, f"{b:.4f}Gb" if b else "n/a"))
+    base = [v for k, v in bits.items() if k != "fedluck" and v]
+    if bits["fedluck"] and base:
+        saving = 1 - bits["fedluck"] / np.mean(base)
+        out.append(("fig3_fedluck_comm_saving", 0.0, f"{saving:.0%}"))
+    return out
+
+
+def tab1_noniid():
+    """Tab. 1: Dirichlet(1.0) non-IID — time & comm to target, FedLuck vs
+    baselines."""
+    task, profiles = _setup()
+    target = 0.70
+    out = []
+    for m in ("fedluck", "fedper", "fedbuff", "fedasync", "fedavg_topk"):
+        h, us = _sim(task, profiles, m, rounds=40, noniid=True)
+        t = h.time_to_accuracy(target)
+        b = h.bits_to_accuracy(target)
+        out.append((f"tab1_noniid_{m}", us,
+                    f"t={t:.2f}s;comm={b:.4f}Gb" if t else "n/a"))
+    return out
+
+
+def tab2_joint_vs_single():
+    """Tab. 2: FedLuck vs Opt.CR (fixed k) vs Opt.LF (fixed δ) — top-1
+    accuracy at a fixed simulated-time budget."""
+    task, profiles = _setup()
+    out = []
+    for m in ("fedluck", "opt_cr", "opt_lf"):
+        h, us = _sim(task, profiles, m, rounds=20)
+        out.append((f"tab2_{m}_final_acc", us,
+                    f"{h.final_accuracy():.3f}"))
+    return out

@@ -1,0 +1,129 @@
+"""Roofline analysis from the dry-run artifacts (results/dryrun/*.json).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+cost_analysis() numbers are PER-DEVICE (the compiled module is the SPMD
+per-device program), so:
+
+    t_compute = flops_per_device / 197e12
+    t_memory  = bytes_per_device / 819e9
+    t_coll    = collective_bytes_per_device / 50e9
+              (≡ global_collective_bytes / (chips × link_bw))
+
+MODEL_FLOPS = 6·N·D for training (N = params, D = tokens; N_active for
+MoE), 2·N·D for inference. useful = MODEL_FLOPS/(chips·peak); the roofline
+fraction reported is useful / max(term) — an MFU upper bound from the
+compiled schedule.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--mesh single] [--md out.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+SHAPE_TOKENS = {  # D per step (global)
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,          # one token × batch
+    "long_500k": 1,
+}
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def model_flops(rec: dict) -> float:
+    n = rec["active_params"]
+    d = SHAPE_TOKENS[rec["shape"]]
+    mult = 6.0 if rec["kind"] == "train" else 2.0
+    return mult * n * d
+
+
+def analyze(rec: dict) -> dict:
+    chips = rec["n_devices"]
+    fl = rec["cost"]["flops_per_device"]
+    by = rec["cost"]["bytes_accessed_per_device"]
+    cb = rec["cost"]["collective_bytes_per_device"]
+    t_c = fl / PEAK_FLOPS
+    t_m = by / HBM_BW
+    t_x = cb / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])
+    mf = model_flops(rec)
+    useful = mf / (chips * PEAK_FLOPS)
+    frac = useful / max(t_c, t_m, t_x, 1e-30)
+    mem = rec["memory"]
+    hbm = ((mem["argument_bytes"] or 0) + (mem["temp_bytes"] or 0)
+           + (mem["output_bytes"] or 0) - (mem["alias_bytes"] or 0))
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+        "dominant": dom[0], "roofline_fraction": frac,
+        "model_flops": mf, "hlo_flops_global": fl * chips,
+        "useful_ratio": mf / max(fl * chips, 1e-30),
+        "hbm_gib": hbm / 2 ** 30,
+        "fits_16g": hbm <= 16 * 2 ** 30,
+    }
+
+
+def suggestion(a: dict) -> str:
+    if a["dominant"] == "collective":
+        return ("shrink TP traffic: bf16 collectives, sequence-parallel "
+                "norm/MLP regions, or trade TP for FSDP on this mesh")
+    if a["dominant"] == "memory":
+        if a["shape"].startswith("decode") or a["shape"] == "long_500k":
+            return ("decode is KV-bandwidth-bound: quantize cache to int8, "
+                    "shard S further, or batch more tokens per pass")
+        return "raise arithmetic intensity: fuse elementwise chains, " \
+               "lift remat policy to save dots"
+    return "compute-bound: reduce remat recompute or causal-mask waste"
+
+
+def load_all(mesh: str | None):
+    out = []
+    for p in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(p) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok" or "cost" not in rec:
+            continue
+        if mesh and rec["mesh"] != mesh:
+            continue
+        if rec.get("variant", {}).get("tag"):
+            continue   # hillclimb variants are reported in §Perf, not here
+        out.append(analyze(rec))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--md", default="")
+    args = ap.parse_args(argv)
+    rows = load_all(args.mesh or None)
+    lines = [
+        "| arch | shape | t_comp(s) | t_mem(s) | t_coll(s) | bound | "
+        "MODEL/HLO | roofline | HBM GiB | next lever |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in sorted(rows, key=lambda r: r["roofline_fraction"]):
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['t_compute']:.3g} "
+            f"| {a['t_memory']:.3g} | {a['t_collective']:.3g} "
+            f"| {a['dominant']} | {a['useful_ratio']:.2f} "
+            f"| {a['roofline_fraction']:.1%} | {a['hbm_gib']:.1f} "
+            f"| {suggestion(a)} |")
+    text = "\n".join(lines)
+    print(text)
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Benchmark harness: one function per paper table/figure + kernel micro-
+benchmarks. Prints ``name,us_per_call,derived`` CSV (spec format).
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig2 tab2  # subset
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks.paper_tables import (fig1_motivation_grid,
+                                         fig2_time_to_accuracy,
+                                         fig3_comm_consumption, tab1_noniid,
+                                         tab2_joint_vs_single)
+    from benchmarks.kernel_bench import kernel_microbench, sync_crossover
+
+    benches = {
+        "fig1": fig1_motivation_grid,
+        "fig2": fig2_time_to_accuracy,
+        "fig3": fig3_comm_consumption,
+        "tab1": tab1_noniid,
+        "tab2": tab2_joint_vs_single,
+        "kernels": kernel_microbench,
+        "sync": sync_crossover,
+    }
+    picks = sys.argv[1:] or list(benches)
+    print("name,us_per_call,derived")
+    for name in picks:
+        try:
+            for row in benches[name]():
+                n, us, derived = row
+                print(f"{n},{us:.1f},{derived}", flush=True)
+        except Exception:
+            traceback.print_exc()
+            print(f"{name},nan,FAILED", flush=True)
+
+
+if __name__ == '__main__':
+    main()

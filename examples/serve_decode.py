@@ -1,0 +1,17 @@
+"""Batched serving example: prefill + greedy decode with KV/SSM caches on
+two different architecture families (GQA transformer and attention-free
+mamba2), smoke configs on CPU.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+import os
+import subprocess
+import sys
+
+os.environ.setdefault("PYTHONPATH", "src")
+for arch in ("gemma3-4b", "mamba2-780m"):
+    print(f"=== serving {arch} (reduced config) ===")
+    subprocess.run([sys.executable, "-m", "repro.launch.serve",
+                    "--arch", arch, "--requests", "4", "--batch", "2",
+                    "--prompt-len", "12", "--gen", "12"],
+                   env=dict(os.environ), check=True)

@@ -1,0 +1,5 @@
+from repro.checkpoint.ckpt import (
+    save_pytree, load_pytree, CheckpointManager,
+)
+
+__all__ = ["save_pytree", "load_pytree", "CheckpointManager"]

@@ -1,0 +1,178 @@
+"""Sharded pytree checkpointing (orbax is not installed offline).
+
+Layout per checkpoint:
+  <dir>/step_<N>/
+    manifest.json   treedef + array specs (shape, dtype, path keys)
+    arrays.npz      flat arrays, key = flattened pytree path
+
+Arrays are pulled to host (fully replicated view) before writing; restore
+re-places them with a target sharding if given. Writes are atomic
+(tmp dir + rename) so a crash mid-save never corrupts the latest step —
+this is the restart-safety contract `launch/train.py` relies on.
+`CheckpointManager` adds retention, latest-step discovery and an async
+(background-thread) save path so the training loop never blocks on disk.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't natively serialize bf16/fp8 — stored as raw uint8 with the
+# true dtype recorded in the manifest.
+_EXT_DTYPES = {"bfloat16": ml_dtypes.bfloat16,
+               "float8_e4m3fn": ml_dtypes.float8_e4m3fn,
+               "float8_e5m2": ml_dtypes.float8_e5m2}
+
+
+def _to_native(arr: np.ndarray) -> np.ndarray:
+    if arr.dtype.name in _EXT_DTYPES:
+        return arr.view(np.uint8)
+    return arr
+
+
+def _from_native(arr: np.ndarray, dtype_name: str, shape) -> np.ndarray:
+    if dtype_name in _EXT_DTYPES:
+        return arr.view(_EXT_DTYPES[dtype_name]).reshape(shape)
+    return arr
+
+
+def _flatten_with_paths(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_pytree(tree, directory: str) -> None:
+    tmp = directory + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    arrays = {}
+    manifest = {"keys": [], "treedef": None}
+    for key, leaf in flat:
+        arr = np.asarray(jax.device_get(leaf))
+        manifest["keys"].append(
+            {"key": key, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+        arrays[key] = _to_native(arr)
+    # record treedef as the example pytree of keys so we can unflatten
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest["treedef"] = str(treedef)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(directory):
+        shutil.rmtree(directory)
+    os.rename(tmp, directory)
+
+
+def load_pytree(directory: str, like=None, shardings=None):
+    """Restore. If `like` is given, restores into its treedef (and the
+    arrays are placed with `shardings` — a matching pytree or None)."""
+    with np.load(os.path.join(directory, "arrays.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    meta = {e["key"]: e for e in manifest["keys"]}
+    arrays = {k: _from_native(v, meta[k]["dtype"], meta[k]["shape"])
+              if k in meta else v for k, v in arrays.items()}
+    if like is None:
+        return arrays  # flat dict form
+    flat = _flatten_with_paths(like)
+    leaves = []
+    for key, leaf in flat:
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing key {key}")
+        arr = arrays[key]
+        if hasattr(leaf, "dtype") and arr.dtype != np.asarray(leaf).dtype:
+            arr = arr.astype(np.asarray(leaf).dtype)
+        leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(like)
+    restored = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        restored = jax.tree.map(
+            lambda x, s: jax.device_put(x, s) if s is not None else x,
+            restored, shardings)
+    return restored
+
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointManager:
+    """Retention + async save + latest-step restore."""
+
+    def __init__(self, root: str, max_to_keep: int = 3, async_save: bool = True):
+        self.root = root
+        self.max_to_keep = max_to_keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(root, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree) -> None:
+        if self.async_save:
+            # snapshot to host synchronously (cheap vs disk), write in thread
+            host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_tree), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, tree)
+
+    def _write(self, step: int, tree) -> None:
+        save_pytree(tree, self._dir(step))
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # --------------------------------------------------------------- restore
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.root):
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(os.path.join(self.root, name, "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, step: int | None = None, like=None, shardings=None):
+        step = self.latest_step() if step is None else step
+        if step is None:
+            return None
+        return load_pytree(self._dir(step), like=like, shardings=shardings)
+
+    # ------------------------------------------------------------------ util
+    def _dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step}")
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.max_to_keep]:
+            shutil.rmtree(self._dir(s), ignore_errors=True)

@@ -1,0 +1,14 @@
+"""grok-1-314b [moe]: 64L d_model=6144 48H (GQA kv=8) d_ff=32768
+vocab=131072, MoE 8 experts top-2. [hf:xai-org/grok-1; unverified]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="grok-1-314b", family="moe",
+    n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=32768, vocab=131072,
+    attn_pattern=("full",), mlp_type="gated",
+    n_experts=8, moe_top_k=2,
+    rope_theta=10_000.0,
+    skip_shapes=("long_500k",),   # pure full attention (DESIGN.md §5)
+    source="hf:xai-org/grok-1; unverified",
+)

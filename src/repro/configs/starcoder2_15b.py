@@ -1,0 +1,13 @@
+"""starcoder2-15b [dense]: 40L d_model=6144 48H (GQA kv=4) d_ff=24576
+vocab=49152. GQA + RoPE. [arXiv:2402.19173; hf]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-15b", family="dense",
+    n_layers=40, d_model=6144, n_heads=48, n_kv_heads=4, head_dim=128,
+    d_ff=24576, vocab=49152,
+    attn_pattern=("full",), mlp_type="gelu", norm_type="layer",
+    rope_theta=100_000.0,
+    skip_shapes=("long_500k",),   # pure full attention (DESIGN.md §5)
+    source="arXiv:2402.19173; hf",
+)

@@ -1,0 +1,203 @@
+"""Server-side aggregation strategies (the paper's 4 baselines + FedLuck).
+
+All strategies speak one protocol driven by the event simulator:
+
+    on_arrival(t_now, arrival)  -> list[AggregationEvent]
+    on_round_boundary(t_now)    -> list[AggregationEvent]
+
+`Arrival` carries the compressed pseudo-gradient (flat fp32), the round tag
+of the model it was computed against, and wire bits. An AggregationEvent
+says "the global model changed; these devices should be handed the new
+model now". Strategies mutate `GlobalModel` in place.
+
+  PeriodicAggregator  — FedPer & FedLuck (Eq. 6, fixed round period T̃)
+  BufferedAggregator  — FedBuff (aggregate every K arrivals)
+  AsyncAggregator     — FedAsync (apply immediately, staleness-weighted)
+  SyncAggregator      — FedAvg(+TopK) (barrier over all devices)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Arrival:
+    device_id: int
+    update: np.ndarray       # dense reconstruction of compressed pseudo-grad
+    model_round: int         # round tag the update was computed from
+    wire_bits: float
+    arrive_time: float
+
+
+@dataclasses.dataclass
+class AggregationEvent:
+    time: float
+    new_round: int
+    release_to: list[int]    # device ids that receive the new global model
+    staleness: dict[int, int]
+
+
+class GlobalModel:
+    """Flat fp32 global parameter vector + round counter."""
+
+    def __init__(self, flat_params: np.ndarray, eta_g: float = 1.0):
+        self.w = np.array(flat_params, dtype=np.float32, copy=True)
+        self.eta_g = float(eta_g)
+        self.round = 0
+
+    def apply_mean(self, updates: list[np.ndarray], scale: float | None = None):
+        """Eq. 6:  w ← w − η_g/|S| Σ g̃."""
+        s = self.eta_g / len(updates) if scale is None else scale
+        acc = np.zeros_like(self.w)
+        for u in updates:
+            acc += u
+        self.w -= s * acc
+        self.round += 1
+
+
+# --------------------------------------------------------------------- mixins
+class _Base:
+    def __init__(self, model: GlobalModel):
+        self.model = model
+        self.total_bits = 0.0
+        self.staleness_log: list[int] = []
+
+    def _tau(self, a: Arrival) -> int:
+        return max(0, self.model.round - a.model_round)
+
+    def on_arrival(self, t_now: float, a: Arrival) -> list[AggregationEvent]:
+        raise NotImplementedError
+
+    def on_round_boundary(self, t_now: float) -> list[AggregationEvent]:
+        return []
+
+
+class PeriodicAggregator(_Base):
+    """AFL with periodic aggregation (FedPer / FedLuck servers are identical;
+    FedLuck differs only in the (k_i, δ_i) plans devices run with)."""
+
+    def __init__(self, model: GlobalModel):
+        super().__init__(model)
+        self.buffer: list[Arrival] = []
+
+    def on_arrival(self, t_now, a):
+        self.total_bits += a.wire_bits
+        self.buffer.append(a)
+        return []
+
+    def on_round_boundary(self, t_now):
+        if not self.buffer:
+            self.model.round += 1  # empty round still advances the period
+            return [AggregationEvent(t_now, self.model.round, [], {})]
+        # τ counts the round being FORMED: a device that trained on w^t and
+        # lands in the aggregation producing w^{t+k} has τ = k = ⌈d_i/T̃⌉
+        # (the equivalence the φ-solver relies on, paper Sec. 2.2).
+        stale = {a.device_id: self._tau(a) + 1 for a in self.buffer}
+        self.staleness_log.extend(stale.values())
+        self.model.apply_mean([a.update for a in self.buffer])
+        ev = AggregationEvent(t_now, self.model.round,
+                              [a.device_id for a in self.buffer], stale)
+        self.buffer = []
+        return [ev]
+
+
+class BufferedAggregator(_Base):
+    """FedBuff: aggregate whenever `buffer_size` gradients are buffered."""
+
+    def __init__(self, model: GlobalModel, buffer_size: int = 3):
+        super().__init__(model)
+        self.K = buffer_size
+        self.buffer: list[Arrival] = []
+
+    def on_arrival(self, t_now, a):
+        self.total_bits += a.wire_bits
+        self.buffer.append(a)
+        if len(self.buffer) < self.K:
+            return []
+        stale = {x.device_id: self._tau(x) for x in self.buffer}
+        self.staleness_log.extend(stale.values())
+        self.model.apply_mean([x.update for x in self.buffer])
+        ev = AggregationEvent(t_now, self.model.round,
+                              [x.device_id for x in self.buffer], stale)
+        self.buffer = []
+        return [ev]
+
+
+class AsyncAggregator(_Base):
+    """FedAsync: apply immediately with polynomial staleness weight
+    s(τ) = (1+τ)^(-a)  (Xie et al. 2019)."""
+
+    def __init__(self, model: GlobalModel, poly_a: float = 0.5,
+                 mix_eta: float = 0.8):
+        super().__init__(model)
+        self.poly_a = poly_a
+        self.mix_eta = mix_eta
+
+    def on_arrival(self, t_now, a):
+        self.total_bits += a.wire_bits
+        tau = self._tau(a)
+        self.staleness_log.append(tau)
+        weight = self.mix_eta * (1.0 + tau) ** (-self.poly_a)
+        self.model.w -= self.model.eta_g * weight * a.update
+        self.model.round += 1
+        return [AggregationEvent(t_now, self.model.round, [a.device_id],
+                                 {a.device_id: tau})]
+
+
+class SyncAggregator(_Base):
+    """FedAvg(+TopK): barrier across all N devices; optional straggler
+    deadline (ft: drop updates arriving > deadline after round start)."""
+
+    def __init__(self, model: GlobalModel, num_devices: int,
+                 deadline: float | None = None):
+        super().__init__(model)
+        self.N = num_devices
+        self.deadline = deadline
+        self.buffer: list[Arrival] = []
+        self.round_start = 0.0
+        self.expected: set[int] | None = None
+
+    def begin_round(self, t_now: float, device_ids: list[int]):
+        self.round_start = t_now
+        self.expected = set(device_ids)
+
+    def on_arrival(self, t_now, a):
+        self.total_bits += a.wire_bits
+        if (self.deadline is not None
+                and t_now - self.round_start > self.deadline):
+            # straggler mitigation: too late, drop (bits were still spent)
+            self.expected.discard(a.device_id)
+        else:
+            self.buffer.append(a)
+            self.expected.discard(a.device_id)
+        if self.expected:
+            return []
+        stale = {x.device_id: self._tau(x) for x in self.buffer}
+        self.staleness_log.extend(stale.values())
+        if self.buffer:
+            self.model.apply_mean([x.update for x in self.buffer])
+        else:
+            self.model.round += 1
+        release = [x.device_id for x in self.buffer] + list(
+            stale.keys() - {x.device_id for x in self.buffer})
+        ev = AggregationEvent(t_now, self.model.round,
+                              sorted({*release, *stale}), stale)
+        self.buffer = []
+        return [ev]
+
+
+def make_aggregator(name: str, model: GlobalModel, *, num_devices: int = 0,
+                    **kw) -> _Base:
+    name = name.lower()
+    if name in ("periodic", "fedper", "fedluck"):
+        return PeriodicAggregator(model)
+    if name == "fedbuff":
+        return BufferedAggregator(model, **kw)
+    if name == "fedasync":
+        return AsyncAggregator(model, **kw)
+    if name in ("sync", "fedavg", "fedavg_topk"):
+        return SyncAggregator(model, num_devices, **kw)
+    raise ValueError(f"unknown aggregator {name}")

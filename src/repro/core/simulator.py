@@ -1,0 +1,386 @@
+"""Event-driven AFL simulator with a simulated wall clock (paper Sec 4.3).
+
+Real JAX training, simulated time: each device runs its k_i local
+momentum-SGD steps as one jitted `lax.scan`, compresses the pseudo-gradient
+(Eq. 4) with its δ_i, and "uploads" — the upload lands on the simulated
+clock at  t + k_i·α_i + rate_i·β_i  (Eq. 5). The server strategy decides
+when aggregation happens (periodic / buffered / async / sync) and the
+simulator hands fresh global models back to devices.
+
+Communication accounting follows the paper: transmitted data ∝ δ
+(bits = rate·d·32, time = rate·β). Strict values/indices accounting is
+available via `count_index_bits=True`.
+
+Fault tolerance hooks: a `FailureSchedule` (repro.ft) injects device
+crashes — an in-flight upload inside a failure window is lost, and the
+device re-registers at recovery (elastic membership; the FedLuck controller
+re-plans). Stragglers are devices whose α drifts mid-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression as C
+from repro.core.aggregation import (Arrival, GlobalModel, PeriodicAggregator,
+                                    SyncAggregator, make_aggregator)
+from repro.core.controller import DeviceProfile, FedLuckController
+from repro.core.factor import Plan
+
+
+# ----------------------------------------------------------------------- task
+@dataclasses.dataclass
+class TrainTask:
+    """A trainable model + data, in pure-function form."""
+    name: str
+    init_fn: Callable[[jax.Array], Any]              # rng -> params pytree
+    loss_fn: Callable[[Any, dict], jax.Array]        # (params, batch) -> scalar
+    acc_fn: Callable[[Any, dict], jax.Array]         # (params, batch) -> scalar
+    dataset: Any                                     # train split (repro.data)
+    test_batch: dict                                 # held-out eval batch
+    batch_size: int = 64
+
+
+@dataclasses.dataclass
+class DeviceSpec:
+    """Static per-device simulation knobs."""
+    profile: DeviceProfile
+    plan: Plan
+    compressor: str = "topk"      # topk | randk | qsgd | signsgd | none
+    error_feedback: bool = False
+
+    @property
+    def rate(self) -> float:
+        """Effective wire rate (fraction of a full fp32 gradient)."""
+        if self.compressor in ("topk", "topk_threshold", "randk"):
+            return self.plan.delta
+        if self.compressor == "qsgd":
+            return 9.0 / 32.0
+        if self.compressor == "signsgd":
+            return 1.0 / 32.0
+        return 1.0
+
+
+@dataclasses.dataclass
+class Record:
+    time: float
+    round: int
+    accuracy: float
+    loss: float
+    gbits: float
+    mean_staleness: float
+
+
+@dataclasses.dataclass
+class History:
+    records: list[Record] = dataclasses.field(default_factory=list)
+
+    def time_to_accuracy(self, target: float) -> float | None:
+        for r in self.records:
+            if r.accuracy >= target:
+                return r.time
+        return None
+
+    def bits_to_accuracy(self, target: float) -> float | None:
+        for r in self.records:
+            if r.accuracy >= target:
+                return r.gbits
+        return None
+
+    def final_accuracy(self, window: int = 3) -> float:
+        if not self.records:
+            return 0.0
+        return float(np.mean([r.accuracy for r in self.records[-window:]]))
+
+
+# ------------------------------------------------------------------ simulator
+class AFLSimulator:
+    def __init__(self, task: TrainTask, devices: list[DeviceSpec],
+                 strategy: str = "periodic", *, round_period: float = 1.0,
+                 eta_l: float = 0.05, eta_g: float = 1.0,
+                 momentum: float = 0.9, seed: int = 0,
+                 client_indices: list[np.ndarray] | None = None,
+                 failure_schedule=None, count_index_bits: bool = False,
+                 strategy_kwargs: dict | None = None):
+        self.task = task
+        self.devices = {d.profile.device_id: d for d in devices}
+        self.round_period = float(round_period)
+        self.eta_l, self.eta_g, self.momentum = eta_l, eta_g, momentum
+        self.failure_schedule = failure_schedule
+        self.count_index_bits = count_index_bits
+        self.strategy_name = strategy
+        self.rng = np.random.RandomState(seed)
+
+        # ---- params / flat spec
+        params = task.init_fn(jax.random.PRNGKey(seed))
+        flat, self.spec = C.flatten_pytree(params)
+        self.dim = int(flat.shape[0])
+        self.model = GlobalModel(np.asarray(flat), eta_g=eta_g)
+        skw = dict(strategy_kwargs or {})
+        if strategy in ("sync", "fedavg", "fedavg_topk"):
+            skw.setdefault("num_devices", len(devices))
+        self.agg = make_aggregator(strategy, self.model, **skw)
+
+        # ---- per-client data
+        from repro.data.pipeline import DataLoader
+        n = len(task.dataset)
+        if client_indices is None:
+            from repro.data.partition import iid_partition
+            client_indices = iid_partition(n, len(devices), seed=seed)
+        self.loaders = {
+            did: DataLoader(task.dataset, idx, batch_size=task.batch_size,
+                            seed=seed + 17 * did)
+            for did, idx in zip(sorted(self.devices), client_indices)}
+
+        # ---- jitted compute, cached per static k / rate
+        self._round_fns: dict[int, Callable] = {}
+        self._compress_fns: dict[tuple, Callable] = {}
+        self._residuals: dict[int, np.ndarray] = {
+            did: np.zeros((self.dim,), np.float32) for did in self.devices}
+        self._eval_fn = jax.jit(self._make_eval())
+
+    # --------------------------------------------------------------- jit fns
+    def _make_eval(self):
+        loss_fn, acc_fn, spec = self.task.loss_fn, self.task.acc_fn, self.spec
+
+        def ev(flat, batch):
+            params = C.unflatten_pytree(flat, spec)
+            return acc_fn(params, batch), loss_fn(params, batch)
+        return ev
+
+    def _local_round_fn(self, k: int):
+        """flat params + stacked batches[k] -> pseudo-gradient g = w0 - wk."""
+        if k in self._round_fns:
+            return self._round_fns[k]
+        loss_fn, spec = self.task.loss_fn, self.spec
+        eta_l, mom = self.eta_l, self.momentum
+
+        @jax.jit
+        def run(flat, batches):
+            params = C.unflatten_pytree(flat, spec)
+            mu0 = jax.tree.map(jnp.zeros_like, params)
+
+            def step(carry, batch):
+                p, mu = carry
+                g = jax.grad(loss_fn)(p, batch)
+                mu = jax.tree.map(lambda m, gg: mom * m + gg, mu, g)
+                p = jax.tree.map(lambda pp, m: pp - eta_l * m, p, mu)
+                return (p, mu), None
+
+            (p1, _), _ = jax.lax.scan(step, (params, mu0), batches)
+            f1, _ = C.flatten_pytree(p1)
+            return flat - f1  # Eq. 4
+
+        self._round_fns[k] = run
+        return run
+
+    def _compressor_fn(self, spec_d: DeviceSpec):
+        key = (spec_d.compressor, round(spec_d.plan.delta, 6),
+               spec_d.error_feedback)
+        if key in self._compress_fns:
+            return self._compress_fns[key]
+        comp = C.make_compressor(spec_d.compressor, spec_d.plan.delta)
+
+        @jax.jit
+        def run(g, residual, rngkey):
+            cc, new_res = C.ef_compress(comp, g, residual, rngkey)
+            return cc.dense(), new_res, cc.wire_bits
+
+        @jax.jit
+        def run_noef(g, rngkey):
+            cc = comp(g, rngkey)
+            return cc.dense(), cc.wire_bits
+
+        fn = run if spec_d.error_feedback else run_noef
+        self._compress_fns[key] = fn
+        return fn
+
+    # ----------------------------------------------------------- device cycle
+    def _device_cycle(self, did: int, start_time: float, model_round: int,
+                      flat_model: np.ndarray):
+        """Compute one local round; return the Arrival (or None if the device
+        fails mid-cycle per the failure schedule)."""
+        spec = self.devices[did]
+        k = spec.plan.k
+        loader = self.loaders[did]
+        batches = [loader.next() for _ in range(k)]
+        stacked = {kk: np.stack([b[kk] for b in batches]) for kk in batches[0]}
+        g = self._local_round_fn(k)(jnp.asarray(flat_model), stacked)
+
+        rngkey = jax.random.PRNGKey(self.rng.randint(0, 2 ** 31 - 1))
+        if spec.error_feedback:
+            dense, new_res, strict_bits = self._compressor_fn(spec)(
+                g, jnp.asarray(self._residuals[did]), rngkey)
+            self._residuals[did] = np.asarray(new_res)
+        else:
+            dense, strict_bits = self._compressor_fn(spec)(g, rngkey)
+
+        compute_t = k * spec.profile.alpha
+        tx_t = spec.rate * spec.profile.beta
+        finish = start_time + compute_t + tx_t
+        if self.failure_schedule is not None and \
+                self.failure_schedule.lost_in_flight(did, start_time, finish):
+            return None, self.failure_schedule.recovery_time(did, start_time)
+        bits = (float(strict_bits) if self.count_index_bits
+                else spec.rate * self.dim * 32.0)
+        return Arrival(did, np.asarray(dense), model_round, bits, finish), None
+
+    # -------------------------------------------------------------------- run
+    def run(self, total_rounds: int = 50, eval_every: int = 1,
+            max_sim_time: float = math.inf) -> History:
+        hist = History()
+        heap: list = []
+        seq = 0
+
+        def push(t, kind, payload):
+            nonlocal seq
+            heapq.heappush(heap, (t, seq, kind, payload))
+            seq += 1
+
+        periodic = isinstance(self.agg, PeriodicAggregator)
+        syncb = isinstance(self.agg, SyncAggregator)
+        if syncb:
+            self.agg.begin_round(0.0, list(self.devices))
+
+        # kick off every device at t=0 with the initial model
+        for did in self.devices:
+            push(0.0, "start", (did, self.model.round))
+        if periodic:
+            push(self.round_period, "boundary", 1)
+
+        evals_done = 0
+        while heap:
+            t, _, kind, payload = heapq.heappop(heap)
+            if t > max_sim_time or self.model.round >= total_rounds:
+                break
+
+            if kind == "start":
+                did, mr = payload
+                if self.failure_schedule is not None and \
+                        self.failure_schedule.is_down(did, t):
+                    push(self.failure_schedule.recovery_time(did, t), "start",
+                         (did, self.model.round))
+                    continue
+                arrival, retry_at = self._device_cycle(
+                    did, t, mr, self.model.w)
+                if arrival is None:  # crashed mid-cycle: lost update
+                    push(retry_at, "start", (did, self.model.round))
+                else:
+                    push(arrival.arrive_time, "arrival", arrival)
+
+            elif kind == "arrival":
+                a: Arrival = payload
+                events = self.agg.on_arrival(t, a)
+                if not periodic and not events and not syncb:
+                    pass
+                for ev in events:
+                    for did in ev.release_to:
+                        push(ev.time, "start", (did, self.model.round))
+                    if syncb and ev.release_to:
+                        self.agg.begin_round(ev.time, list(self.devices))
+                if not events and not periodic and not syncb:
+                    # buffered strategy: device waits; FedBuff hands the
+                    # *current* model back immediately so training continues
+                    push(t, "start", (a.device_id, self.model.round))
+                if events and eval_every and \
+                        self.model.round >= evals_done * eval_every:
+                    self._eval(hist, t)
+                    evals_done += 1
+
+            elif kind == "boundary":
+                r = payload
+                events = self.agg.on_round_boundary(t)
+                for ev in events:
+                    for did in ev.release_to:
+                        push(ev.time, "start", (did, self.model.round))
+                push(t + self.round_period, "boundary", r + 1)
+                if eval_every and self.model.round >= evals_done * eval_every:
+                    self._eval(hist, t)
+                    evals_done += 1
+
+        self._eval(hist, t if heap else max_sim_time)
+        return hist
+
+    def _eval(self, hist: History, t: float):
+        acc, loss = self._eval_fn(jnp.asarray(self.model.w),
+                                  self.task.test_batch)
+        stal = self.agg.staleness_log[-len(self.devices):]
+        hist.records.append(Record(
+            time=float(t), round=int(self.model.round),
+            accuracy=float(acc), loss=float(loss),
+            gbits=self.agg.total_bits / 1e9,
+            mean_staleness=float(np.mean(stal)) if stal else 0.0))
+
+
+# ------------------------------------------------------------ device builders
+def make_heterogeneous_devices(
+        num: int, model_bits: float, *, base_alpha: float = 0.02,
+        alpha_spread: float = 4.0, bw_range: tuple = (0.25e6, 2e6),
+        seed: int = 0) -> list[DeviceProfile]:
+    """Paper Sec 4.3: α ~ U[a, 4a]; bandwidth ~ U[0.25, 2] Mb/s."""
+    rng = np.random.RandomState(seed)
+    out = []
+    for i in range(num):
+        alpha = rng.uniform(base_alpha, base_alpha * alpha_spread)
+        bw = rng.uniform(*bw_range)
+        out.append(DeviceProfile.from_bandwidth(i, alpha, model_bits, bw))
+    return out
+
+
+def plan_devices(profiles: list[DeviceProfile], method: str,
+                 round_period: float, *, k_bounds=(1, 60),
+                 delta_bounds=(1e-3, 1.0), fixed_k: int = 10,
+                 fixed_delta: float = 0.1,
+                 compressor_override: str | None = None,
+                 error_feedback: bool = False) -> list[DeviceSpec]:
+    """Build DeviceSpecs for one of the 5 methods of the paper's Sec 4."""
+    method = method.lower()
+    specs = []
+    if method == "fedluck":
+        ctl = FedLuckController(round_period, k_bounds, delta_bounds)
+        for p in profiles:
+            plan = ctl.register(p)
+            specs.append(DeviceSpec(p, plan, compressor_override or "topk",
+                                    error_feedback))
+    elif method == "opt_cr":   # fixed k, optimize δ (Tab. 2)
+        ctl = FedLuckController(round_period, k_bounds, delta_bounds,
+                                mode="fixed_k", fixed_k=fixed_k)
+        for p in profiles:
+            specs.append(DeviceSpec(p, ctl.register(p),
+                                    compressor_override or "topk",
+                                    error_feedback))
+    elif method == "opt_lf":   # fixed δ, optimize k (Tab. 2)
+        ctl = FedLuckController(round_period, k_bounds, delta_bounds,
+                                mode="fixed_delta", fixed_delta=fixed_delta)
+        for p in profiles:
+            specs.append(DeviceSpec(p, ctl.register(p),
+                                    compressor_override or "topk",
+                                    error_feedback))
+    elif method in ("fedper", "fedavg_topk"):
+        for p in profiles:
+            plan = Plan(fixed_k, fixed_delta, 0.0,
+                        fixed_k * p.alpha + fixed_delta * p.beta, 0)
+            specs.append(DeviceSpec(p, plan, compressor_override or "topk",
+                                    error_feedback))
+    elif method in ("fedbuff", "fedasync"):   # no compression baselines
+        for p in profiles:
+            plan = Plan(fixed_k, 1.0, 0.0, fixed_k * p.alpha + p.beta, 0)
+            specs.append(DeviceSpec(p, plan, compressor_override or "none",
+                                    error_feedback))
+    else:
+        raise ValueError(f"unknown method {method}")
+    return specs
+
+
+STRATEGY_FOR_METHOD = {
+    "fedluck": "periodic", "fedper": "periodic", "opt_cr": "periodic",
+    "opt_lf": "periodic", "fedbuff": "fedbuff", "fedasync": "fedasync",
+    "fedavg_topk": "sync",
+}

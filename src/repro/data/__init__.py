@@ -1,0 +1,11 @@
+from repro.data.synthetic import (
+    SyntheticClassification, SyntheticTokens, SyntheticSpeech, make_task_dataset,
+)
+from repro.data.partition import dirichlet_partition, iid_partition
+from repro.data.pipeline import DataLoader, sharded_batches
+
+__all__ = [
+    "SyntheticClassification", "SyntheticTokens", "SyntheticSpeech",
+    "make_task_dataset", "dirichlet_partition", "iid_partition",
+    "DataLoader", "sharded_batches",
+]

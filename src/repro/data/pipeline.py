@@ -1,0 +1,45 @@
+"""Batching pipeline: per-client infinite loaders + mesh-sharded host batches."""
+from __future__ import annotations
+
+from typing import Iterator
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class DataLoader:
+    """Infinite shuffled batches over a subset of a dataset (one FL client)."""
+
+    def __init__(self, dataset, indices: np.ndarray | None = None,
+                 batch_size: int = 64, seed: int = 0, drop_last: bool = True):
+        self.ds = dataset
+        self.indices = np.arange(len(dataset)) if indices is None else indices
+        self.batch_size = min(batch_size, len(self.indices))
+        self.rng = np.random.RandomState(seed)
+        self._order = self.rng.permutation(self.indices)
+        self._pos = 0
+
+    def next(self) -> dict:
+        if self._pos + self.batch_size > len(self._order):
+            self._order = self.rng.permutation(self.indices)
+            self._pos = 0
+        idx = self._order[self._pos:self._pos + self.batch_size]
+        self._pos += self.batch_size
+        return self.ds.batch(idx)
+
+    def __iter__(self) -> Iterator[dict]:
+        while True:
+            yield self.next()
+
+
+def sharded_batches(loader: DataLoader, mesh: Mesh,
+                    batch_axes: tuple[str, ...] = ("data",)) -> Iterator[dict]:
+    """Place host batches on the mesh, batch dim sharded over `batch_axes`."""
+    spec = P(batch_axes)
+    while True:
+        host = loader.next()
+        yield {
+            k: jax.device_put(v, NamedSharding(mesh, spec if np.ndim(v) else P()))
+            for k, v in host.items()
+        }

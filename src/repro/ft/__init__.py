@@ -1,0 +1,3 @@
+from repro.ft.failures import FailureSchedule, FailureWindow, StragglerDrift
+
+__all__ = ["FailureSchedule", "FailureWindow", "StragglerDrift"]

@@ -1,0 +1,64 @@
+"""Failure / straggler models for fault-tolerance testing.
+
+The AFL design is inherently failure-tolerant: a dead device's update is
+simply absent from S^t and aggregation proceeds (Eq. 6 averages over
+whatever arrived). These helpers let tests and benchmarks inject failures
+and verify that property end-to-end, and model stragglers whose compute
+slows mid-run (triggering controller re-plans).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureWindow:
+    device_id: int
+    start: float
+    end: float          # device is down for t in [start, end)
+
+
+@dataclasses.dataclass
+class FailureSchedule:
+    windows: list[FailureWindow]
+
+    def is_down(self, device_id: int, t: float) -> bool:
+        return any(w.device_id == device_id and w.start <= t < w.end
+                   for w in self.windows)
+
+    def lost_in_flight(self, device_id: int, start: float, finish: float) -> bool:
+        """True if a failure window begins inside (start, finish): the local
+        round / upload is lost (node crash mid-round)."""
+        return any(w.device_id == device_id and start < w.start < finish
+                   for w in self.windows)
+
+    def recovery_time(self, device_id: int, t: float) -> float:
+        """Earliest time >= t at which the device is back up."""
+        t_rec = t
+        for w in sorted(self.windows, key=lambda w: w.start):
+            if w.device_id == device_id and w.start <= t_rec < w.end:
+                t_rec = w.end
+        return max(t_rec, t + 1e-9)
+
+    @staticmethod
+    def random(num_devices: int, horizon: float, rate_per_device: float = 0.2,
+               mean_downtime: float = 2.0, seed: int = 0) -> "FailureSchedule":
+        rng = np.random.RandomState(seed)
+        windows = []
+        for d in range(num_devices):
+            n = rng.poisson(rate_per_device)
+            for _ in range(n):
+                s = rng.uniform(0, horizon)
+                windows.append(FailureWindow(d, s, s + rng.exponential(
+                    mean_downtime)))
+        return FailureSchedule(windows)
+
+
+@dataclasses.dataclass
+class StragglerDrift:
+    """α multiplier applied to a device from `start` on (compute slowdown)."""
+    device_id: int
+    start: float
+    alpha_multiplier: float = 3.0

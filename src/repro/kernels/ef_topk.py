@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused error-feedback threshold select (top-k pass 2).
+
+Given the threshold t from pass 1, performs in ONE streaming pass:
+
+    acc       = g + residual            (error feedback accumulate)
+    keep      = |acc| >= t
+    out       = acc * keep              (what ships to the server)
+    residual' = acc * (1 - keep)        (what stays on device)
+
+HBM traffic: read g + residual, write out + residual' — 2R+2W, the minimum.
+The unfused reference does accumulate / compare / two selects as separate
+HLO ops (>=3R+3W). A second output `nnz` (per-call count) feeds the wire-
+bytes accounting and the optional exact-k correction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 8 * 1024
+
+
+def _ef_topk_kernel(g_ref, r_ref, t_ref, out_ref, res_ref, nnz_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        nnz_ref[...] = jnp.zeros_like(nnz_ref)
+
+    acc = g_ref[...].astype(jnp.float32) + r_ref[...].astype(jnp.float32)
+    t = t_ref[0, 0]
+    keep = (jnp.abs(acc) >= t)
+    kept = jnp.where(keep, acc, 0.0)
+    out_ref[...] = kept.astype(out_ref.dtype)
+    res_ref[...] = (acc - kept).astype(res_ref.dtype)
+    nnz_ref[...] += jnp.sum(keep.astype(jnp.float32), keepdims=True
+                            ).reshape(nnz_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def ef_topk(g: jax.Array, residual: jax.Array, threshold: jax.Array, *,
+            block: int = DEFAULT_BLOCK, interpret: bool = False):
+    """Returns (out, new_residual, nnz) — flat, same dtype as g."""
+    d = g.shape[0]
+    pad = (-d) % block
+    if pad:
+        g = jnp.concatenate([g, jnp.zeros((pad,), g.dtype)])
+        residual = jnp.concatenate([residual, jnp.zeros((pad,), residual.dtype)])
+    nblocks = g.shape[0] // block
+    g2 = g.reshape(nblocks, block)
+    r2 = residual.reshape(nblocks, block)
+    t2 = jnp.asarray(threshold, jnp.float32).reshape(1, 1)
+
+    out, res, nnz = pl.pallas_call(
+        _ef_topk_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, block), g.dtype),
+            jax.ShapeDtypeStruct((nblocks, block), residual.dtype),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g2, r2, t2)
+    return out.reshape(-1)[:d], res.reshape(-1)[:d], nnz[0, 0]

@@ -1,0 +1,89 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+`topk_compress` is the full TPU-native top-k pipeline (DESIGN.md §3):
+
+  pass 0  gmax = max|g|                       (XLA reduce)
+  pass 1  coarse log2-bucket histogram        (magnitude_hist kernel)
+  pass 2  fine linear histogram inside bucket (magnitude_hist kernel)
+  solve   threshold t s.t. #{|g+r| >= t} ~= δ·d   (O(buckets), on-chip)
+  pass 3  fused EF select                     (ef_topk kernel)
+
+On CPU (this container) kernels run with interpret=True; on TPU they
+compile to Mosaic. All wrappers are shape-polymorphic over flat [d] inputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ef_topk import ef_topk
+from repro.kernels.fused_momentum import fused_momentum
+from repro.kernels.magnitude_hist import magnitude_hist
+
+INTERPRET = jax.default_backend() == "cpu"
+
+
+def _solve_threshold(counts_ge: jax.Array, edges: jax.Array, k) -> tuple:
+    """Pick (lo, hi) bracket: largest edge with count >= k and the edge
+    above it. edges descending; counts_ge monotone nondecreasing."""
+    reached = counts_ge >= k
+    sel = jnp.argmax(reached)                  # first True (or 0 if none)
+    any_reached = jnp.any(reached)
+    sel = jnp.where(any_reached, sel, edges.shape[0] - 1)
+    hi = edges[jnp.maximum(sel - 1, 0)]
+    lo = edges[sel]
+    return lo, hi
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("rate", "coarse_buckets", "fine_buckets",
+                                    "block", "interpret"))
+def topk_compress(g: jax.Array, residual: jax.Array, *, rate: float,
+                  coarse_buckets: int = 48, fine_buckets: int = 128,
+                  block: int = 8 * 1024, interpret: bool | None = None):
+    """Error-feedback threshold top-k at density `rate` (δ = k/d).
+
+    Returns (out_dense, new_residual, nnz, threshold). Selection matches
+    exact top-|.|-k up to threshold-resolution ties: nnz ∈ [~k, k(1+ε)]
+    with ε bounded by the fine bucket width (tested in test_kernels).
+    """
+    if interpret is None:
+        interpret = INTERPRET
+    d = g.shape[0]
+    k = max(1, min(d, int(round(rate * d))))
+    acc_stat_src = g.astype(jnp.float32) + residual.astype(jnp.float32)
+    # NOTE: threshold statistics must be over the EF accumulator, since
+    # pass 3 selects on |g + residual|.
+    gmax = jnp.max(jnp.abs(acc_stat_src)) + 1e-30
+
+    # pass 1: coarse log2 buckets
+    coarse_edges = gmax * 2.0 ** (-jnp.arange(coarse_buckets + 1,
+                                              dtype=jnp.float32))
+    c_counts = magnitude_hist(acc_stat_src, coarse_edges, block=block,
+                              interpret=interpret)
+    lo, hi = _solve_threshold(c_counts, coarse_edges, k)
+
+    # pass 2: fine linear buckets inside [lo, hi]
+    frac = jnp.arange(fine_buckets + 1, dtype=jnp.float32) / fine_buckets
+    fine_edges = hi - (hi - lo) * frac         # descending hi -> lo
+    fine_edges = jnp.maximum(fine_edges, 1e-30)
+    f_counts = magnitude_hist(acc_stat_src, fine_edges, block=block,
+                              interpret=interpret)
+    _, t = _solve_threshold(f_counts, fine_edges, k)
+
+    out, new_res, nnz = ef_topk(g, residual, t, block=block,
+                                interpret=interpret)
+    return out, new_res, nnz, t
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lr", "momentum", "block", "interpret"))
+def momentum_update(w: jax.Array, mu: jax.Array, g: jax.Array, *, lr: float,
+                    momentum: float = 0.9, block: int = 8 * 1024,
+                    interpret: bool | None = None):
+    if interpret is None:
+        interpret = INTERPRET
+    return fused_momentum(w, mu, g, lr=lr, momentum=momentum, block=block,
+                          interpret=interpret)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every kernel in repro.kernels (tests diff vs these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_magnitude_hist(g: jax.Array, edges: jax.Array) -> jax.Array:
+    """counts_ge[j] = #{ |g| >= edges[j] }, float32[n_edges]."""
+    mag = jnp.abs(g.astype(jnp.float32))
+    return jnp.sum(mag[None, :] >= edges.astype(jnp.float32)[:, None],
+                   axis=1).astype(jnp.float32)
+
+
+def ref_ef_topk(g: jax.Array, residual: jax.Array, threshold) -> tuple:
+    acc = g.astype(jnp.float32) + residual.astype(jnp.float32)
+    keep = jnp.abs(acc) >= jnp.asarray(threshold, jnp.float32)
+    out = jnp.where(keep, acc, 0.0)
+    res = acc - out
+    return out.astype(g.dtype), res.astype(residual.dtype), \
+        jnp.sum(keep.astype(jnp.float32))
+
+
+def ref_fused_momentum(w, mu, g, *, lr: float, momentum: float = 0.9):
+    mu_new = momentum * mu.astype(jnp.float32) + g.astype(jnp.float32)
+    w_new = w.astype(jnp.float32) - lr * mu_new
+    return w_new.astype(w.dtype), mu_new.astype(mu.dtype)
+
+
+def ref_exact_topk_dense(g: jax.Array, k: int) -> jax.Array:
+    """Exact top-k as a dense masked vector (selection oracle)."""
+    _, idx = jax.lax.top_k(jnp.abs(g), k)
+    out = jnp.zeros_like(g)
+    return out.at[idx].set(g[idx])
+
+
+def ref_threshold_from_hist(counts_ge: jax.Array, edges: jax.Array,
+                            k: int) -> jax.Array:
+    """Smallest edge whose >=-count reaches k (edges descending)."""
+    sel = jnp.argmax(counts_ge >= k)
+    return edges[sel]

@@ -1,0 +1,3 @@
+from repro.models import nn, small
+
+__all__ = ["nn", "small"]

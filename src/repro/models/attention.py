@@ -1,0 +1,206 @@
+"""Attention: GQA/MQA + RoPE + sliding window + prefix-LM, memory-bounded.
+
+Training/prefill use a flash-style double-chunked implementation (outer
+lax.map over query chunks, inner lax.scan over KV chunks with running
+max/sum/accumulator in fp32) so the live logits buffer is q_chunk×kv_chunk,
+never S×S — required for seq 4096 × batch 256 and 32k prefill.
+
+Decode is a single-token dense pass written so reductions run OVER the
+(possibly sequence-sharded) cache axis: under GSPMD the max/sum/contraction
+over a sharded S lower to local partials + small all-reduces — i.e.
+flash-decoding's 2-pass softmax falls out of the sharding, with no gather
+of the KV cache.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------------ rope
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: [..., S, H, hd] (hd even), positions: [S] or [B, S] int."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq      # [..., S, half]
+    ang = ang[..., None, :]                                    # broadcast H
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype)], axis=-1)
+
+
+FULL_WINDOW = 1 << 30     # "window" value meaning full attention
+
+
+# ------------------------------------------------------------------------ mask
+def _mask(qpos, kpos, *, causal: bool, window, prefix_len: int):
+    """True where q may attend k. qpos [qc], kpos [kc] absolute positions.
+    `window` may be a TRACED int scalar (per-layer dynamic sliding window);
+    pass FULL_WINDOW for full attention."""
+    q = qpos[:, None]
+    k = kpos[None, :]
+    if causal:
+        m = k <= q
+        if prefix_len:
+            m = m | (k < prefix_len)          # prefix-LM: prefix always visible
+    else:
+        m = jnp.ones((qpos.shape[0], kpos.shape[0]), jnp.bool_)
+    if window is not None:
+        m = m & (k > q - window)
+    return m
+
+
+# ------------------------------------------------- flash attention (train/prefill)
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window=None,
+                    prefix_len: int = 0, q_chunk: int = 512,
+                    kv_chunk: int = 512,
+                    softmax_scale: float | None = None) -> jax.Array:
+    """q: [B, S, H, hd], k/v: [B, S, KV, hd] with H = KV * G. Returns [B, S, H, hd].
+
+    fp32 softmax state; O(q_chunk · kv_chunk) live logits. `window` may be a
+    traced scalar (FULL_WINDOW = no windowing). Always called under jit.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, S)
+    nq, nk = S // q_chunk, S // kv_chunk
+    assert S % q_chunk == 0 and S % kv_chunk == 0, (S, q_chunk, kv_chunk)
+
+    qr = q.reshape(B, nq, q_chunk, KV, G, hd)
+    kr = k.reshape(B, nk, kv_chunk, KV, hd)
+    vr = v.reshape(B, nk, kv_chunk, KV, hd)
+
+    def one_q_chunk(qi):
+        qc = qr[:, qi]                                   # [B, qc, KV, G, hd]
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+
+        @functools.partial(jax.checkpoint,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            kc = kr[:, ki]                               # [B, kc, KV, hd]
+            vc = vr[:, ki]
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            logits = jnp.einsum("bqkgd,bskd->bkgqs", qc, kc,
+                                preferred_element_type=jnp.float32) * scale
+            msk = _mask(qpos, kpos, causal=causal, window=window,
+                        prefix_len=prefix_len)           # [qc, kc]
+            logits = jnp.where(msk[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p, vc.astype(jnp.float32))
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, hd), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                          jnp.arange(nk))
+        out = acc / jnp.maximum(l_f[..., None], 1e-30)   # [B, KV, G, qc, hd]
+        return jnp.transpose(out, (0, 3, 1, 2, 4))       # [B, qc, KV, G, hd]
+
+    one_q_chunk = jax.checkpoint(
+        one_q_chunk, policy=jax.checkpoint_policies.nothing_saveable)
+    out = jax.lax.map(one_q_chunk, jnp.arange(nq))       # [nq, B, qc, KV, G, hd]
+    out = jnp.transpose(out, (1, 0, 2, 3, 4, 5)).reshape(B, S, H, hd)
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------- decode (1 token)
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cur_index: jax.Array, *, window=None,
+                     softmax_scale: float | None = None,
+                     k_scale: jax.Array | None = None,
+                     v_scale: jax.Array | None = None) -> jax.Array:
+    """q: [B, 1, H, hd]; caches: [B, S, KV, hd]; cur_index: scalar int —
+    the position being written/read this step (attends to [0, cur_index]).
+
+    int8 caches: pass per-(position, head) `k_scale`/`v_scale` [B, S, KV];
+    the dequantization FOLDS into the logits (×k_scale after the dot) and
+    the PV contraction (×v_scale into p before the dot), so the cache is
+    only ever read as int8 — the decode bandwidth roofline halves vs bf16.
+
+    Reductions run over the cache's S axis; if S is sharded, XLA lowers them
+    to partial max/sum + all-reduce (flash-decoding on the mesh).
+    """
+    B, _, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
+    qh = q.reshape(B, KV, G, hd)
+
+    if k_scale is not None:
+        # quantize q per (b, kv, g) so the QK dot is s8×s8→s32 — the cache
+        # is never widened; dequant is two rank-3 scalings.
+        qs = jnp.maximum(jnp.max(jnp.abs(qh.astype(jnp.float32)), -1)
+                         / 127.0, 1e-8)                    # [B,KV,G]
+        q8 = jnp.clip(jnp.round(qh.astype(jnp.float32) / qs[..., None]),
+                      -127, 127).astype(jnp.int8)
+        li = jnp.einsum("bkgd,bskd->bkgs", q8, k_cache,
+                        preferred_element_type=jnp.int32)
+        logits = li.astype(jnp.float32) * qs[..., None] * scale \
+            * jnp.transpose(k_scale, (0, 2, 1))[:, :, None, :]
+    else:
+        logits = jnp.einsum("bkgd,bskd->bkgs", qh, k_cache,
+                            preferred_element_type=jnp.float32) * scale
+
+    pos = jnp.arange(S)
+    valid = pos <= cur_index
+    if window is not None:
+        valid = valid & (pos > cur_index - window)
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    pn = p / jnp.maximum(l, 1e-30)
+    if v_scale is not None:
+        # fold v_scale into the probabilities, then quantize THEM so the
+        # PV dot is s8×s8→s32 as well.
+        pf = pn * jnp.transpose(v_scale, (0, 2, 1))[:, :, None, :]
+        ps = jnp.maximum(jnp.max(pf, -1) / 127.0, 1e-12)   # [B,KV,G]
+        p8 = jnp.clip(jnp.round(pf / ps[..., None]), -127, 127) \
+            .astype(jnp.int8)
+        oi = jnp.einsum("bkgs,bskd->bkgd", p8, v_cache,
+                        preferred_element_type=jnp.int32)
+        out = oi.astype(jnp.float32) * ps[..., None]
+    else:
+        # p cast to the cache dtype: avoids materializing an fp32 copy of
+        # the ENTIRE cache; accumulation stays fp32.
+        out = jnp.einsum("bkgs,bskd->bkgd", pn.astype(v_cache.dtype),
+                         v_cache, preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# -------------------------------------------------------------------- reference
+def reference_attention(q, k, v, *, causal=True, window=None, prefix_len=0,
+                        softmax_scale=None):
+    """O(S²) oracle for tests."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
+    qr = q.reshape(B, S, KV, G, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qr, k,
+                        preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(S)
+    msk = _mask(pos, pos, causal=causal, window=window, prefix_len=prefix_len)
+    logits = jnp.where(msk[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bkgqd", w, v.astype(jnp.float32))
+    return jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(B, S, H, hd).astype(q.dtype)

@@ -1,0 +1,214 @@
+"""Minimal functional NN substrate (no flax offline).
+
+Every module is a pair of pure functions:
+  init(rng, ...) -> params (a pytree of jnp arrays)
+  apply(params, x, ...) -> y
+
+Params are plain dicts so they shard/pjit/compress trivially. Initializers
+match common practice (trunc-normal fan-in for projections, ones/zeros for
+norms). dtype policy: `param_dtype` for storage, `dtype` for compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # pytree of arrays
+Initializer = Callable[[jax.Array, Sequence[int], Any], jax.Array]
+
+
+# ---------------------------------------------------------------- initializers
+def trunc_normal(stddev: float = 0.02) -> Initializer:
+    def init(key, shape, dtype):
+        return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+                * stddev).astype(dtype)
+    return init
+
+
+def lecun_normal() -> Initializer:
+    def init(key, shape, dtype):
+        fan_in = shape[0] if len(shape) >= 1 else 1
+        if len(shape) == 4:  # HWIO conv
+            fan_in = shape[0] * shape[1] * shape[2]
+        stddev = 1.0 / math.sqrt(max(1, fan_in))
+        return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+                * stddev).astype(dtype)
+    return init
+
+
+def zeros_init() -> Initializer:
+    return lambda key, shape, dtype: jnp.zeros(shape, dtype)
+
+
+def ones_init() -> Initializer:
+    return lambda key, shape, dtype: jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------- linear
+def linear_init(key, in_dim: int, out_dim: int, *, use_bias: bool = True,
+                param_dtype=jnp.float32, init: Initializer | None = None) -> Params:
+    init = init or lecun_normal()
+    p = {"kernel": init(key, (in_dim, out_dim), param_dtype)}
+    if use_bias:
+        p["bias"] = jnp.zeros((out_dim,), param_dtype)
+    return p
+
+
+def linear_apply(p: Params, x: jax.Array, *, dtype=None) -> jax.Array:
+    k = p["kernel"]
+    if dtype is not None:
+        k = k.astype(dtype)
+        x = x.astype(dtype)
+    y = x @ k
+    if "bias" in p:
+        y = y + p["bias"].astype(y.dtype)
+    return y
+
+
+# ------------------------------------------------------------------- embedding
+def embedding_init(key, vocab: int, dim: int, *, param_dtype=jnp.float32) -> Params:
+    return {"embedding": trunc_normal(1.0 / math.sqrt(dim))(key, (vocab, dim), param_dtype)}
+
+
+def embedding_apply(p: Params, ids: jax.Array, *, dtype=None) -> jax.Array:
+    emb = p["embedding"]
+    if dtype is not None:
+        emb = emb.astype(dtype)
+    return jnp.take(emb, ids, axis=0)
+
+
+def embedding_attend(p: Params, x: jax.Array, *, dtype=None) -> jax.Array:
+    """Tied decode head: logits = x @ E^T."""
+    emb = p["embedding"]
+    if dtype is not None:
+        emb = emb.astype(dtype)
+        x = x.astype(dtype)
+    return x @ emb.T
+
+
+# ----------------------------------------------------------------------- norms
+def rmsnorm_init(dim: int, *, param_dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), param_dtype)}
+
+
+def rmsnorm_apply(p: Params, x: jax.Array, *, eps: float = 1e-6,
+                  upcast: bool = True) -> jax.Array:
+    orig_dtype = x.dtype
+    if upcast:
+        x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * p["scale"].astype(x.dtype)
+    return y.astype(orig_dtype)
+
+
+def layernorm_init(dim: int, *, param_dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), param_dtype),
+            "bias": jnp.zeros((dim,), param_dtype)}
+
+
+def layernorm_apply(p: Params, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    orig_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype)
+    return y.astype(orig_dtype)
+
+
+# ------------------------------------------------------------------------ conv
+def conv2d_init(key, in_ch: int, out_ch: int, kernel: int, *,
+                param_dtype=jnp.float32) -> Params:
+    return {"kernel": lecun_normal()(key, (kernel, kernel, in_ch, out_ch), param_dtype),
+            "bias": jnp.zeros((out_ch,), param_dtype)}
+
+
+def conv2d_apply(p: Params, x: jax.Array, *, stride: int = 1,
+                 padding: str = "SAME") -> jax.Array:
+    y = jax.lax.conv_general_dilated(
+        x, p["kernel"].astype(x.dtype), window_strides=(stride, stride),
+        padding=padding, dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["bias"].astype(y.dtype)
+
+
+def max_pool(x: jax.Array, window: int = 2, stride: int = 2) -> jax.Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, window, window, 1), (1, stride, stride, 1),
+        "VALID")
+
+
+# ------------------------------------------------------------------------ lstm
+def lstm_cell_init(key, in_dim: int, hidden: int, *, param_dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": lecun_normal()(k1, (in_dim, 4 * hidden), param_dtype),
+        "wh": lecun_normal()(k2, (hidden, 4 * hidden), param_dtype),
+        "bias": jnp.zeros((4 * hidden,), param_dtype),
+    }
+
+
+def lstm_cell_apply(p: Params, carry, x: jax.Array):
+    h, c = carry
+    gates = x @ p["wi"].astype(x.dtype) + h @ p["wh"].astype(x.dtype) \
+        + p["bias"].astype(x.dtype)
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return (h, c), h
+
+
+def lstm_layer_apply(p: Params, xs: jax.Array) -> jax.Array:
+    """xs: [B, T, D] -> hs [B, T, H] via lax.scan over time."""
+    B = xs.shape[0]
+    H = p["wh"].shape[0]
+    init = (jnp.zeros((B, H), xs.dtype), jnp.zeros((B, H), xs.dtype))
+
+    def step(carry, x_t):
+        return lstm_cell_apply(p, carry, x_t)
+
+    _, hs = jax.lax.scan(step, init, jnp.swapaxes(xs, 0, 1))
+    return jnp.swapaxes(hs, 0, 1)
+
+
+# ------------------------------------------------------------------ activation
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x: jax.Array) -> jax.Array:
+    return jax.nn.silu(x)
+
+
+ACT = {"gelu": gelu, "silu": silu, "relu": jax.nn.relu, "tanh": jnp.tanh}
+
+
+# ------------------------------------------------------------------- utilities
+def count_params(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+def tree_zeros_like(params: Params, dtype=None) -> Params:
+    return jax.tree.map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), params)
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+
+    @staticmethod
+    def small() -> "DTypePolicy":
+        return DTypePolicy(jnp.float32, jnp.float32)
+
+    @staticmethod
+    def large() -> "DTypePolicy":
+        return DTypePolicy(jnp.float32, jnp.bfloat16)

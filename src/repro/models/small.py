@@ -1,0 +1,164 @@
+"""The paper's experiment models (Sec 4.1) + a fast MLP for unit tests.
+
+  - 4-layer CNN for FMNIST  (inspired by Li et al. 2020, as cited)
+  - VGG11s (slim VGG11, Sattler et al.-style) for CIFAR-10
+  - 2-layer 128-unit LSTM for Speech Commands
+
+All follow the nn.py functional protocol: init(rng) -> params,
+apply(params, batch_inputs) -> logits, plus `make_task` adapters producing
+core.simulator.TrainTask objects over the synthetic stand-in datasets.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+
+# ------------------------------------------------------------------- CNN (FMNIST)
+def cnn_init(key, *, num_classes: int = 10, in_ch: int = 1):
+    ks = jax.random.split(key, 4)
+    return {
+        "conv1": nn.conv2d_init(ks[0], in_ch, 32, 5),
+        "conv2": nn.conv2d_init(ks[1], 32, 64, 5),
+        "fc1": nn.linear_init(ks[2], 64 * 7 * 7, 512),
+        "fc2": nn.linear_init(ks[3], 512, num_classes),
+    }
+
+
+def cnn_apply(p, image):
+    x = image
+    x = jax.nn.relu(nn.conv2d_apply(p["conv1"], x))
+    x = nn.max_pool(x)
+    x = jax.nn.relu(nn.conv2d_apply(p["conv2"], x))
+    x = nn.max_pool(x)
+    x = x.reshape((x.shape[0], -1))
+    x = jax.nn.relu(nn.linear_apply(p["fc1"], x))
+    return nn.linear_apply(p["fc2"], x)
+
+
+# --------------------------------------------------------------- VGG11s (CIFAR-10)
+_VGG11S_PLAN = [(32, 1), ("M",), (64, 1), ("M",), (128, 2), ("M",),
+                (256, 2), ("M",)]  # slim: half the channels of VGG11
+
+
+def vgg11s_init(key, *, num_classes: int = 10, in_ch: int = 3):
+    params, ch = {}, in_ch
+    i = 0
+    for item in _VGG11S_PLAN:
+        if item[0] == "M":
+            continue
+        out_ch, reps = item
+        for _ in range(reps):
+            key, sub = jax.random.split(key)
+            params[f"conv{i}"] = nn.conv2d_init(sub, ch, out_ch, 3)
+            ch = out_ch
+            i += 1
+    key, k1, k2 = jax.random.split(key, 3)
+    params["fc1"] = nn.linear_init(k1, 256 * 2 * 2, 256)
+    params["fc2"] = nn.linear_init(k2, 256, num_classes)
+    return params
+
+
+def vgg11s_apply(p, image):
+    x = image
+    i = 0
+    for item in _VGG11S_PLAN:
+        if item[0] == "M":
+            x = nn.max_pool(x)
+            continue
+        _, reps = item
+        for _ in range(reps):
+            x = jax.nn.relu(nn.conv2d_apply(p[f"conv{i}"], x))
+            i += 1
+    x = x.reshape((x.shape[0], -1))
+    x = jax.nn.relu(nn.linear_apply(p["fc1"], x))
+    return nn.linear_apply(p["fc2"], x)
+
+
+# ------------------------------------------------------------------- LSTM (SC)
+def lstm_init(key, *, features: int = 40, hidden: int = 128,
+              num_classes: int = 10):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "lstm1": nn.lstm_cell_init(k1, features, hidden),
+        "lstm2": nn.lstm_cell_init(k2, hidden, hidden),
+        "head": nn.linear_init(k3, hidden, num_classes),
+    }
+
+
+def lstm_apply(p, frames):
+    h = nn.lstm_layer_apply(p["lstm1"], frames)
+    h = nn.lstm_layer_apply(p["lstm2"], h)
+    return nn.linear_apply(p["head"], h[:, -1, :])
+
+
+# --------------------------------------------------------------------- fast MLP
+def mlp_init(key, *, in_dim: int = 784, hidden: int = 128,
+             num_classes: int = 10):
+    k1, k2 = jax.random.split(key)
+    return {"fc1": nn.linear_init(k1, in_dim, hidden),
+            "fc2": nn.linear_init(k2, hidden, num_classes)}
+
+
+def mlp_apply(p, image):
+    x = image.reshape((image.shape[0], -1))
+    x = jax.nn.relu(nn.linear_apply(p["fc1"], x))
+    return nn.linear_apply(p["fc2"], x)
+
+
+# ------------------------------------------------------------------ task adapters
+def softmax_xent(logits, labels):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+
+
+def make_task(name: str, *, num_samples: int = 4000, test_samples: int = 1000,
+              batch_size: int = 64, seed: int = 0, noise: float | None = None):
+    """Build a core.simulator.TrainTask for one of the paper's tasks
+    (synthetic data stand-ins; see repro.data.synthetic)."""
+    from repro.core.simulator import TrainTask
+    from repro.data.synthetic import (SyntheticClassification, SyntheticSpeech)
+
+    kw = {} if noise is None else {"noise": noise}
+    if name in ("cnn_fmnist", "mlp_fmnist"):
+        ds = SyntheticClassification(shape=(28, 28, 1), num_samples=num_samples,
+                                     seed=seed, sample_seed=seed, **kw)
+        test = SyntheticClassification(shape=(28, 28, 1),
+                                       num_samples=test_samples, seed=seed,
+                                       sample_seed=seed + 999, **kw)
+        init, apply, key_in = (
+            (cnn_init, cnn_apply, "image") if name == "cnn_fmnist"
+            else (mlp_init, mlp_apply, "image"))
+    elif name == "vgg11s_cifar10":
+        ds = SyntheticClassification(shape=(32, 32, 3), num_samples=num_samples,
+                                     seed=seed, sample_seed=seed, **kw)
+        test = SyntheticClassification(shape=(32, 32, 3),
+                                       num_samples=test_samples, seed=seed,
+                                       sample_seed=seed + 999, **kw)
+        init, apply, key_in = vgg11s_init, vgg11s_apply, "image"
+    elif name == "lstm_sc":
+        ds = SyntheticSpeech(num_samples=num_samples, seed=seed,
+                             sample_seed=seed, **kw)
+        test = SyntheticSpeech(num_samples=test_samples, seed=seed,
+                               sample_seed=seed + 999, **kw)
+        init, apply, key_in = lstm_init, lstm_apply, "frames"
+    else:
+        raise ValueError(f"unknown task {name}")
+
+    test_batch = test.batch(jnp.arange(len(test)))
+
+    def loss_fn(params, batch):
+        return softmax_xent(apply(params, batch[key_in]), batch["label"])
+
+    def acc_fn(params, batch):
+        return accuracy(apply(params, batch[key_in]), batch["label"])
+
+    return TrainTask(name=name, init_fn=lambda rng: init(rng),
+                     loss_fn=loss_fn, acc_fn=acc_fn, dataset=ds,
+                     test_batch=test_batch, batch_size=batch_size)

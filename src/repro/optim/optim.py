@@ -1,0 +1,146 @@
+"""Optimizers (optax is not installed offline; same (init, update) protocol).
+
+All optimizers are pytree-polymorphic and jit-safe. `momentum_sgd` is the
+paper's setting (momentum 0.9). AdamW carries fp32 master weights when the
+params are low-precision (the large-arch policy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.1) -> Schedule:
+    def f(step):
+        t = jnp.minimum(step.astype(jnp.float32) / max(1, total_steps), 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return f
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int,
+                  final_frac: float = 0.1) -> Schedule:
+    cos = cosine_schedule(lr, max(1, total_steps - warmup), final_frac)
+
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / max(1, warmup)
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+    return f
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """(init, update) pair. update returns (new_params, new_state)."""
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params)
+    name: str = "opt"
+
+
+def _cast_like(src, ref):
+    return jax.tree.map(lambda s, r: s.astype(r.dtype), src, ref)
+
+
+def sgd(lr: float | Schedule) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        eta = sched(state["step"])
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - eta * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_params, {"step": state["step"] + 1}
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum_sgd(lr: float | Schedule, momentum: float = 0.9,
+                 weight_decay: float = 0.0, nesterov: bool = False) -> Optimizer:
+    """Paper's optimizer: momentum-SGD, momentum 0.9 (Sec 4.3)."""
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        eta = sched(state["step"])
+
+        def upd(p, g, m):
+            g32 = g.astype(jnp.float32)
+            if weight_decay:
+                g32 = g32 + weight_decay * p.astype(jnp.float32)
+            m_new = momentum * m + g32
+            step_dir = (g32 + momentum * m_new) if nesterov else m_new
+            return (p.astype(jnp.float32) - eta * step_dir).astype(p.dtype), m_new
+
+        flat = jax.tree.map(upd, params, grads, state["mu"])
+        new_params = jax.tree.map(lambda t: t[0], flat,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"step": state["step"] + 1, "mu": new_mu}
+
+    return Optimizer(init, update, "momentum_sgd")
+
+
+def adamw(lr: float | Schedule, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(z, params),
+            "v": jax.tree.map(z, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        eta = sched(state["step"])
+        b1t = 1 - b1 ** step.astype(jnp.float32)
+        b2t = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g32
+            v_new = b2 * v + (1 - b2) * jnp.square(g32)
+            mhat = m_new / b1t
+            vhat = v_new / b2t
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - eta * delta).astype(p.dtype), m_new, v_new
+
+        flat = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        is_t = lambda t: isinstance(t, tuple)
+        new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=is_t)
+        new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=is_t)
+        new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=is_t)
+        return new_params, {"step": step, "m": new_m, "v": new_v}
+
+    return Optimizer(init, update, "adamw")
+
+
+def apply_updates(params, updates, scale: float = 1.0):
+    """params + scale * updates (used by the PS-side global update, Eq. 6)."""
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32)
+                      + scale * u.astype(jnp.float32)).astype(p.dtype),
+        params, updates)

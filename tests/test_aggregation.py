@@ -1,0 +1,92 @@
+import numpy as np
+import pytest
+
+from repro.core.aggregation import (Arrival, AsyncAggregator,
+                                    BufferedAggregator, GlobalModel,
+                                    PeriodicAggregator, SyncAggregator,
+                                    make_aggregator)
+
+
+def _arr(did, vec, rnd, t, bits=100.0):
+    return Arrival(did, np.asarray(vec, np.float32), rnd, bits, t)
+
+
+class TestPeriodic:
+    def test_buffers_until_boundary_then_eq6(self):
+        m = GlobalModel(np.zeros(3), eta_g=1.0)
+        agg = PeriodicAggregator(m)
+        assert agg.on_arrival(0.3, _arr(0, [1, 0, 0], 0, 0.3)) == []
+        assert agg.on_arrival(0.7, _arr(1, [0, 2, 0], 0, 0.7)) == []
+        evs = agg.on_round_boundary(1.0)
+        # w ← w − η_g/|S| Σ g̃  = −([1,0,0]+[0,2,0])/2
+        np.testing.assert_allclose(m.w, [-0.5, -1.0, 0.0])
+        assert m.round == 1
+        assert sorted(evs[0].release_to) == [0, 1]
+
+    def test_empty_round_still_advances(self):
+        m = GlobalModel(np.zeros(2))
+        agg = PeriodicAggregator(m)
+        agg.on_round_boundary(1.0)
+        assert m.round == 1
+        np.testing.assert_allclose(m.w, 0.0)
+
+
+class TestBuffered:
+    def test_triggers_at_k(self):
+        m = GlobalModel(np.zeros(2))
+        agg = BufferedAggregator(m, buffer_size=3)
+        assert agg.on_arrival(0.1, _arr(0, [3, 0], 0, 0.1)) == []
+        assert agg.on_arrival(0.2, _arr(1, [0, 3], 0, 0.2)) == []
+        evs = agg.on_arrival(0.3, _arr(2, [3, 3], 0, 0.3))
+        assert len(evs) == 1
+        np.testing.assert_allclose(m.w, [-2.0, -2.0])
+
+
+class TestAsync:
+    def test_staleness_weight_poly(self):
+        m = GlobalModel(np.zeros(1), eta_g=1.0)
+        agg = AsyncAggregator(m, poly_a=0.5, mix_eta=1.0)
+        agg.on_arrival(0.1, _arr(0, [1.0], 0, 0.1))    # τ=0 → weight 1
+        np.testing.assert_allclose(m.w, [-1.0])
+        # next arrival computed against round 0, but model is at round 1
+        agg.on_arrival(0.2, _arr(1, [1.0], 0, 0.2))    # τ=1 → 2^-0.5
+        np.testing.assert_allclose(m.w, [-1.0 - 2 ** -0.5])
+
+    def test_staleness_logged(self):
+        m = GlobalModel(np.zeros(1))
+        agg = AsyncAggregator(m)
+        agg.on_arrival(0.1, _arr(0, [1.0], 0, 0.1))
+        agg.on_arrival(0.2, _arr(1, [1.0], 0, 0.2))
+        assert agg.staleness_log == [0, 1]
+
+
+class TestSync:
+    def test_barrier_waits_for_all(self):
+        m = GlobalModel(np.zeros(1))
+        agg = SyncAggregator(m, num_devices=2)
+        agg.begin_round(0.0, [0, 1])
+        assert agg.on_arrival(0.5, _arr(0, [2.0], 0, 0.5)) == []
+        evs = agg.on_arrival(0.9, _arr(1, [4.0], 0, 0.9))
+        assert len(evs) == 1
+        np.testing.assert_allclose(m.w, [-3.0])
+
+    def test_deadline_drops_straggler(self):
+        m = GlobalModel(np.zeros(1))
+        agg = SyncAggregator(m, num_devices=2, deadline=1.0)
+        agg.begin_round(0.0, [0, 1])
+        agg.on_arrival(0.5, _arr(0, [2.0], 0, 0.5))
+        evs = agg.on_arrival(5.0, _arr(1, [100.0], 0, 5.0))  # too late
+        assert len(evs) == 1
+        np.testing.assert_allclose(m.w, [-2.0])  # straggler excluded
+
+
+def test_factory():
+    m = GlobalModel(np.zeros(1))
+    assert isinstance(make_aggregator("fedluck", m), PeriodicAggregator)
+    assert isinstance(make_aggregator("fedbuff", m, buffer_size=2),
+                      BufferedAggregator)
+    assert isinstance(make_aggregator("fedasync", m), AsyncAggregator)
+    assert isinstance(make_aggregator("fedavg_topk", m, num_devices=3),
+                      SyncAggregator)
+    with pytest.raises(ValueError):
+        make_aggregator("nope", m)

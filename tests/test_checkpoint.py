@@ -1,0 +1,71 @@
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+
+
+@pytest.fixture
+def tree():
+    return {"params": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                       "b": jnp.ones(4, jnp.bfloat16)},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+class TestSaveLoad:
+    def test_roundtrip(self, tree, tmp_path):
+        d = str(tmp_path / "ck")
+        save_pytree(tree, d)
+        back = load_pytree(d, like=tree)
+        np.testing.assert_allclose(np.asarray(back["params"]["w"]),
+                                   np.asarray(tree["params"]["w"]))
+        assert back["params"]["b"].dtype == jnp.bfloat16
+        assert int(back["step"]) == 7
+
+    def test_atomic_overwrite(self, tree, tmp_path):
+        d = str(tmp_path / "ck")
+        save_pytree(tree, d)
+        tree2 = {**tree, "step": jnp.asarray(8, jnp.int32)}
+        save_pytree(tree2, d)
+        assert int(load_pytree(d, like=tree)["step"]) == 8
+        assert not os.path.exists(d + ".tmp")
+
+    def test_missing_key_raises(self, tree, tmp_path):
+        d = str(tmp_path / "ck")
+        save_pytree({"params": tree["params"]}, d)
+        with pytest.raises(KeyError):
+            load_pytree(d, like=tree)
+
+
+class TestManager:
+    def test_retention_and_latest(self, tree, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), max_to_keep=2,
+                                async_save=False)
+        for s in [10, 20, 30]:
+            mgr.save(s, tree)
+        assert mgr.steps() == [20, 30]
+        assert mgr.latest_step() == 30
+
+    def test_async_save_then_restore(self, tree, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_save=True)
+        mgr.save(5, tree)
+        mgr.wait()
+        back = mgr.restore(like=tree)
+        assert int(back["step"]) == 7
+
+    def test_restore_empty_returns_none(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        assert mgr.restore() is None
+
+    def test_restart_resumes_training(self, tmp_path):
+        """Crash/restart contract used by launch/train.py."""
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        w = np.arange(5, dtype=np.float32)
+        mgr.save(3, {"w": w, "round": np.asarray(3)})
+        # "crash"; new process restores
+        mgr2 = CheckpointManager(str(tmp_path))
+        state = mgr2.restore(like={"w": w, "round": np.asarray(0)})
+        assert int(state["round"]) == 3
+        np.testing.assert_allclose(state["w"], w)

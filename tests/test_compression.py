@@ -1,0 +1,108 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression as C
+
+
+def _g(d, seed=0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(d).astype(np.float32)
+                       * np.exp(rng.randn(d)))
+
+
+class TestTopK:
+    def test_keeps_exactly_k_largest(self):
+        g = _g(1000)
+        comp = C.topk(g, 0.05)
+        k = C.num_keep(1000, 0.05)
+        assert comp.values.shape == (k,)
+        dense = np.asarray(comp.dense())
+        mags = np.abs(np.asarray(g))
+        thresh = np.sort(mags)[-k]
+        kept = np.nonzero(dense)[0]
+        assert len(kept) == k
+        assert np.all(mags[kept] >= thresh - 1e-7)
+
+    def test_dense_reconstruction_exact_on_support(self):
+        g = _g(512, 1)
+        comp = C.topk(g, 0.1)
+        dense = np.asarray(comp.dense())
+        idx = np.asarray(comp.indices)
+        np.testing.assert_array_equal(dense[idx], np.asarray(g)[idx])
+
+    def test_rate_one_is_identity(self):
+        g = _g(128, 2)
+        np.testing.assert_allclose(np.asarray(C.topk(g, 1.0).dense()),
+                                   np.asarray(g), rtol=1e-6)
+
+    @pytest.mark.parametrize("rate", [0.001, 0.01, 0.1, 0.5])
+    def test_threshold_variant_close_to_exact(self, rate):
+        g = _g(20000, 3)
+        k = C.num_keep(20000, rate)
+        t = C.topk_threshold(g, rate)
+        nnz = int(np.count_nonzero(np.asarray(t.dense())))
+        assert nnz <= k * 1.02 + 1
+        assert nnz >= k * 0.85 - 1
+        # support overlap with exact top-k
+        exact = set(np.asarray(C.topk(g, rate).indices).tolist())
+        ours = set(np.nonzero(np.asarray(t.dense()))[0].tolist())
+        assert len(ours & exact) >= 0.85 * len(ours)
+
+
+class TestErrorFeedback:
+    def test_conservation(self):
+        """comp.dense() + residual' == g + residual (nothing is lost)."""
+        g, r = _g(400, 4), _g(400, 5) * 0.1
+        comp, new_r = C.ef_compress(C.make_compressor("topk", 0.05), g, r)
+        np.testing.assert_allclose(np.asarray(comp.dense() + new_r),
+                                   np.asarray(g + r), rtol=1e-5, atol=1e-6)
+
+    def test_residual_shrinks_error_over_rounds(self):
+        """With EF, the accumulated transmitted signal tracks the true sum."""
+        rng = np.random.RandomState(6)
+        d, rounds = 300, 30
+        comp = C.make_compressor("topk", 0.05)
+        r = jnp.zeros(d)
+        sent = np.zeros(d)
+        total = np.zeros(d)
+        for t in range(rounds):
+            g = jnp.asarray(rng.randn(d).astype(np.float32))
+            total += np.asarray(g)
+            cc, r = C.ef_compress(comp, g, r)
+            sent += np.asarray(cc.dense())
+        # EF guarantees sent = total - residual  => error bounded by residual
+        np.testing.assert_allclose(sent, total - np.asarray(r), rtol=1e-4,
+                                   atol=1e-4)
+
+
+class TestQuantizers:
+    def test_signsgd_signs(self):
+        g = _g(256, 7)
+        d = np.asarray(C.signsgd(g).dense())
+        assert np.all(np.sign(d[np.asarray(g) != 0])
+                      == np.sign(np.asarray(g)[np.asarray(g) != 0]))
+
+    def test_qsgd_bounded_error(self):
+        g = _g(256, 8)
+        d = np.asarray(C.qsgd(g, levels=256).dense())
+        norm = float(jnp.linalg.norm(g))
+        assert np.max(np.abs(d - np.asarray(g))) <= norm / 255 + 1e-5
+
+    def test_randk_unbiased_scale(self):
+        g = jnp.ones(100)
+        comp = C.randk(g, 0.2, jax.random.PRNGKey(0))
+        assert np.allclose(np.asarray(comp.values), 5.0)  # d/k = 5
+
+
+class TestPytreeFlatten:
+    def test_roundtrip(self):
+        tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                "b": {"c": jnp.ones(4, jnp.bfloat16)}}
+        flat, spec = C.flatten_pytree(tree)
+        back = C.unflatten_pytree(flat, spec)
+        assert back["a"].shape == (2, 3)
+        assert back["b"]["c"].dtype == jnp.bfloat16
+        np.testing.assert_allclose(np.asarray(back["a"]),
+                                   np.asarray(tree["a"]))

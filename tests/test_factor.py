@@ -1,0 +1,65 @@
+import numpy as np
+import pytest
+
+from repro.core.factor import (phi, solve_plan, solve_plan_fixed_delta,
+                               solve_plan_fixed_k, staleness)
+
+
+class TestPhi:
+    def test_matches_eq14_by_hand(self):
+        # φ = ((kα+δβ)²(2−δ) + T²) / (T² k √δ)
+        k, d, a, b, T = 10, 0.1, 0.05, 20.0, 1.0
+        expected = ((k * a + d * b) ** 2 * (2 - d) + T * T) / (T * T * k
+                                                               * np.sqrt(d))
+        assert np.isclose(phi(k, d, a, b, T), expected)
+
+    def test_staleness_eq(self):
+        assert staleness(10, 0.1, 0.05, 20.0, 1.0) == np.ceil(2.5)
+
+
+class TestSolver:
+    def test_beats_brute_force_grid(self):
+        a, b, T = 0.03, 15.0, 1.0
+        plan = solve_plan(a, b, T, k_bounds=(1, 50),
+                          delta_bounds=(1e-3, 1.0))
+        ks = np.arange(1, 51)
+        ds = np.geomspace(1e-3, 1.0, 500)
+        K, D = np.meshgrid(ks, ds, indexing="ij")
+        brute = phi(K, D, a, b, T).min()
+        assert plan.phi <= brute * 1.001
+
+    def test_respects_bounds(self):
+        plan = solve_plan(0.5, 100.0, 1.0, k_bounds=(5, 8),
+                          delta_bounds=(0.01, 0.02))
+        assert 5 <= plan.k <= 8
+        assert 0.01 <= plan.delta <= 0.02
+
+    def test_slow_network_compresses_more(self):
+        """Higher β (slower link) must push δ down (more compression)."""
+        fast = solve_plan(0.02, 1.0, 1.0)
+        slow = solve_plan(0.02, 200.0, 1.0)
+        assert slow.delta < fast.delta
+
+    def test_slow_compute_fewer_local_steps(self):
+        """Higher α (slower device) must not increase k."""
+        fast = solve_plan(0.005, 10.0, 1.0)
+        slow = solve_plan(0.5, 10.0, 1.0)
+        assert slow.k <= fast.k
+
+    def test_fixed_variants_consistent(self):
+        a, b, T = 0.05, 30.0, 1.0
+        joint = solve_plan(a, b, T)
+        lf = solve_plan_fixed_delta(a, b, T, delta=joint.delta)
+        cr = solve_plan_fixed_k(a, b, T, k=joint.k)
+        # fixing one coordinate at the joint optimum recovers (≈) the optimum
+        assert lf.phi <= joint.phi * 1.01
+        assert cr.phi <= joint.phi * 1.01
+        # and the joint optimum is never worse
+        assert joint.phi <= lf.phi * 1.001
+        assert joint.phi <= cr.phi * 1.001
+
+    def test_bad_bounds_raise(self):
+        with pytest.raises(ValueError):
+            solve_plan(0.1, 1.0, 1.0, delta_bounds=(0.0, 1.0))
+        with pytest.raises(ValueError):
+            solve_plan(0.1, 1.0, 1.0, k_bounds=(0, 5))

@@ -1,0 +1,244 @@
+"""Per-arch smoke tests (reduced configs): one forward/train step on CPU,
+output shapes + no NaNs; numerics of attention/SSD vs oracles; prefill →
+decode consistency (the serving invariant)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import SHAPES
+from repro.models import mamba2 as m2
+from repro.models.attention import (FULL_WINDOW, decode_attention,
+                                    flash_attention, reference_attention)
+from repro.models.transformer import LM
+
+
+def _batch(cfg, B=2, S=64, seed=0):
+    rng = np.random.RandomState(seed)
+    if cfg.frontend == "frames":
+        return {"frames": jnp.asarray(
+                    rng.randn(B, S, cfg.frame_dim).astype(np.float32)),
+                "labels": jnp.asarray(
+                    rng.randint(0, cfg.vocab, (B, S)).astype(np.int32))}
+    if cfg.frontend == "patches":
+        text = S - cfg.n_patches
+        return {"patches": jnp.asarray(
+                    rng.randn(B, cfg.n_patches, cfg.patch_dim)
+                    .astype(np.float32)),
+                "tokens": jnp.asarray(
+                    rng.randint(0, cfg.vocab, (B, text)).astype(np.int32)),
+                "labels": jnp.asarray(
+                    rng.randint(0, cfg.vocab, (B, text)).astype(np.int32))}
+    return {"tokens": jnp.asarray(
+                rng.randint(0, cfg.vocab, (B, S)).astype(np.int32)),
+            "labels": jnp.asarray(
+                rng.randint(0, cfg.vocab, (B, S)).astype(np.int32))}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_train_step_shapes_and_finite(self, arch):
+        cfg = get_config(arch).smoke()
+        lm = LM(cfg, dtype=jnp.float32, remat=False)
+        params = lm.init(jax.random.PRNGKey(0))
+        batch = _batch(cfg)
+        loss, grads = jax.jit(jax.value_and_grad(lm.loss))(params, batch)
+        assert np.isfinite(float(loss))
+        leaves = jax.tree.leaves(grads)
+        assert all(np.isfinite(np.asarray(l)).all() for l in leaves)
+        assert float(loss) > 0
+
+    def test_full_config_dims_match_assignment(self, arch):
+        cfg = get_config(arch)
+        spec = {
+            "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+            "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+            "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+            "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+            "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+            "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+            "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+            "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+            "mamba2-780m": (48, 1536, 0, 0, 0, 50280),
+            "paligemma-3b": (18, 2048, 8, 1, 16384, 257216),
+        }[arch]
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab) == spec
+
+    def test_input_specs_are_abstract(self, arch):
+        cfg = get_config(arch)
+        for shape in cfg.shapes():
+            specs = cfg.input_specs(shape)
+            for v in jax.tree.leaves(specs):
+                assert isinstance(v, jax.ShapeDtypeStruct)
+
+
+class TestMoEArchs:
+    @pytest.mark.parametrize("arch", ["grok-1-314b", "qwen3-moe-30b-a3b"])
+    def test_moe_routes_to_topk_experts(self, arch):
+        from repro.models.moe import moe_apply, moe_init
+        cfg = get_config(arch).smoke()
+        p = moe_init(jax.random.PRNGKey(0), cfg.d_model, cfg.d_ff,
+                     cfg.n_experts)
+        x = jnp.asarray(np.random.RandomState(0).randn(2, 8, cfg.d_model)
+                        .astype(np.float32))
+        y = moe_apply(p, x, n_experts=cfg.n_experts, top_k=cfg.moe_top_k,
+                      dtype=jnp.float32)
+        assert y.shape == x.shape
+        assert np.isfinite(np.asarray(y)).all()
+
+    def test_moe_capacity_drop_is_bounded(self):
+        """At cf=1.25 with balanced-ish routing, most slots survive."""
+        from repro.models.moe import moe_apply, moe_init
+        d, E, k = 32, 4, 2
+        p = moe_init(jax.random.PRNGKey(1), d, 64, E)
+        x = jnp.asarray(np.random.RandomState(1).randn(4, 64, d)
+                        .astype(np.float32))
+        y_lo = moe_apply(p, x, n_experts=E, top_k=k, capacity_factor=1.25,
+                         dtype=jnp.float32)
+        y_hi = moe_apply(p, x, n_experts=E, top_k=k, capacity_factor=8.0,
+                         dtype=jnp.float32)
+        frac = float(jnp.mean(jnp.abs(y_lo - y_hi) > 1e-6))
+        assert frac < 0.5  # most tokens unaffected by capacity
+
+
+class TestAttentionNumerics:
+    @pytest.mark.parametrize("window,prefix,causal", [
+        (FULL_WINDOW, 0, True), (32, 0, True), (FULL_WINDOW, 17, True),
+        (FULL_WINDOW, 0, False)])
+    def test_flash_vs_reference(self, window, prefix, causal):
+        rng = np.random.RandomState(0)
+        q = jnp.asarray(rng.randn(2, 128, 4, 16).astype(np.float32))
+        k = jnp.asarray(rng.randn(2, 128, 2, 16).astype(np.float32))
+        v = jnp.asarray(rng.randn(2, 128, 2, 16).astype(np.float32))
+        f = jax.jit(lambda q, k, v: flash_attention(
+            q, k, v, causal=causal, window=jnp.int32(window),
+            prefix_len=prefix, q_chunk=32, kv_chunk=32))(q, k, v)
+        r = reference_attention(q, k, v, causal=causal, window=window,
+                                prefix_len=prefix)
+        np.testing.assert_allclose(np.asarray(f), np.asarray(r), atol=1e-4)
+
+    def test_decode_matches_last_row(self):
+        rng = np.random.RandomState(1)
+        S, cur = 64, 40
+        q = jnp.asarray(rng.randn(2, S, 4, 16).astype(np.float32))
+        k = jnp.asarray(rng.randn(2, S, 2, 16).astype(np.float32))
+        v = jnp.asarray(rng.randn(2, S, 2, 16).astype(np.float32))
+        out = decode_attention(q[:, cur:cur + 1], k, v, jnp.int32(cur),
+                               window=jnp.int32(FULL_WINDOW))
+        r = reference_attention(q[:, :cur + 1], k[:, :cur + 1],
+                                v[:, :cur + 1], causal=True)
+        np.testing.assert_allclose(np.asarray(out[:, 0]),
+                                   np.asarray(r[:, -1]), atol=1e-4)
+
+
+class TestSSD:
+    def test_chunked_vs_sequential(self):
+        rng = np.random.RandomState(2)
+        b, S, H, P, N = 2, 96, 3, 8, 4
+        xh = jnp.asarray(rng.randn(b, S, H, P).astype(np.float32))
+        dt = jnp.asarray(np.abs(rng.randn(b, S, H)).astype(np.float32) * 0.5)
+        A = -jnp.asarray(np.abs(rng.randn(H)).astype(np.float32))
+        Bm = jnp.asarray(rng.randn(b, S, N).astype(np.float32))
+        Cm = jnp.asarray(rng.randn(b, S, N).astype(np.float32))
+        y_c, st_c = m2.ssd_chunked(xh, dt * A, dt, Bm, Cm, chunk=32)
+        y_r, st_r = m2.ssd_reference(xh, dt * A, dt, Bm, Cm)
+        np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_r),
+                                   atol=2e-3, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(st_c), np.asarray(st_r),
+                                   atol=2e-3, rtol=1e-3)
+
+    def test_initial_state_carries(self):
+        rng = np.random.RandomState(3)
+        b, S, H, P, N = 1, 64, 2, 4, 4
+        mk = lambda *s: jnp.asarray(rng.randn(*s).astype(np.float32))
+        xh = mk(b, S, H, P)
+        dt = jnp.abs(mk(b, S, H)) * 0.3
+        A = -jnp.abs(mk(H))
+        Bm, Cm = mk(b, S, N), mk(b, S, N)
+        # full pass == two half passes chained via state
+        y_full, st_full = m2.ssd_chunked(xh, dt * A, dt, Bm, Cm, chunk=16)
+        y1, st1 = m2.ssd_chunked(xh[:, :32], (dt * A)[:, :32], dt[:, :32],
+                                 Bm[:, :32], Cm[:, :32], chunk=16)
+        y2, st2 = m2.ssd_chunked(xh[:, 32:], (dt * A)[:, 32:], dt[:, 32:],
+                                 Bm[:, 32:], Cm[:, 32:], chunk=16,
+                                 initial_state=st1)
+        np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full),
+                                   atol=2e-3, rtol=1e-3)
+        np.testing.assert_allclose(
+            np.asarray(jnp.concatenate([y1, y2], axis=1)),
+            np.asarray(y_full), atol=2e-3, rtol=1e-3)
+
+
+class TestPrefillDecodeConsistency:
+    @pytest.mark.parametrize("arch", ["gemma3-4b", "hymba-1.5b",
+                                      "mamba2-780m", "paligemma-3b",
+                                      "qwen3-moe-30b-a3b"])
+    def test_decode_equals_full_forward(self, arch):
+        cfg = get_config(arch).smoke()
+        if cfg.n_experts:
+            # MoE capacity drops are load-dependent (a token may be dropped
+            # in the full forward but never in single-token decode) — lift
+            # the capacity so the consistency invariant is exact.
+            cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+        lm = LM(cfg, dtype=jnp.float32, remat=False)
+        params = lm.init(jax.random.PRNGKey(1))
+        rng = np.random.RandomState(0)
+        B, S = 2, 32
+        batch = {k: v for k, v in _batch(cfg, B, S, 0).items()
+                 if k != "labels"}
+        logits_p, caches = jax.jit(lm.prefill)(params, batch)
+        caches = {k: (jnp.concatenate(
+            [v, jnp.zeros(v.shape[:2] + (4,) + v.shape[3:], v.dtype)],
+            axis=2) if k in ("k", "v") else v) for k, v in caches.items()}
+        nxt = jnp.asarray(rng.randint(0, cfg.vocab, (B, 1)).astype(np.int32))
+        logits_d, _ = jax.jit(lm.decode_step)(params, caches, nxt,
+                                              jnp.int32(S))
+        if cfg.frontend == "patches":
+            batch2 = dict(batch,
+                          tokens=jnp.concatenate([batch["tokens"], nxt], 1))
+        else:
+            batch2 = {"tokens": jnp.concatenate([batch["tokens"], nxt], 1)}
+        logits_f, _ = jax.jit(lm.prefill)(params, batch2)
+        np.testing.assert_allclose(np.asarray(logits_d[:, 0]),
+                                   np.asarray(logits_f[:, 0]), atol=2e-2)
+
+
+class TestInt8KVCache:
+    """int8 KV cache (decode bandwidth lever): per-(position, head) scales,
+    s8×s8 dots — must track the bf16 path closely and never widen the
+    cache."""
+
+    def test_decode_matches_bf16_path(self):
+        cfg = get_config("stablelm-3b").smoke()
+        lm16 = LM(cfg, dtype=jnp.float32, remat=False)
+        lm8 = dataclasses.replace(lm16, kv_dtype="int8")
+        params = lm16.init(jax.random.PRNGKey(0))
+        rng = np.random.RandomState(0)
+        B, S = 2, 32
+        tok = jnp.asarray(rng.randint(0, cfg.vocab, (B, S)), jnp.int32)
+        c16, c8 = lm16.init_cache(B, S), lm8.init_cache(B, S)
+        assert c8["k"].dtype == jnp.int8
+        assert c8["k_scale"].shape == c8["k"].shape[:-1]
+        d16 = jax.jit(lm16.decode_step)
+        d8 = jax.jit(lm8.decode_step)
+        for t in range(S):
+            l16, c16 = d16(params, c16, tok[:, t:t + 1], jnp.int32(t))
+            l8, c8 = d8(params, c8, tok[:, t:t + 1], jnp.int32(t))
+        a, b = np.asarray(l16), np.asarray(l8)
+        corr = np.corrcoef(a.ravel(), b.ravel())[0, 1]
+        assert corr > 0.999, corr
+        assert (a[:, -1].argmax(-1) == b[:, -1].argmax(-1)).all()
+
+    def test_quantize_roundtrip_error_bounded(self):
+        from repro.models.transformer import _quantize_kv
+        rng = np.random.RandomState(1)
+        x = jnp.asarray(rng.randn(2, 16, 4, 32).astype(np.float32)) * 3.0
+        codes, scale = _quantize_kv(x)
+        back = codes.astype(jnp.float32) * scale[..., None]
+        err = np.abs(np.asarray(back - x))
+        # error ≤ half a quantization step (= scale/2) elementwise
+        assert (err <= np.asarray(scale)[..., None] * 0.5 + 1e-6).all()

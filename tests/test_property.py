@@ -1,0 +1,105 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as C
+from repro.core.aggregation import Arrival, GlobalModel, PeriodicAggregator
+from repro.core.factor import phi, solve_plan
+from repro.data.partition import dirichlet_partition, iid_partition
+
+_dims = st.integers(min_value=8, max_value=2000)
+_rates = st.floats(min_value=1e-3, max_value=1.0)
+_seeds = st.integers(min_value=0, max_value=2 ** 16)
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=_dims, rate=_rates, seed=_seeds)
+def test_topk_nnz_never_exceeds_budget(d, rate, seed):
+    g = jnp.asarray(np.random.RandomState(seed).randn(d).astype(np.float32))
+    comp = C.topk(g, rate)
+    k = C.num_keep(d, rate)
+    assert comp.values.shape[0] == k
+    assert int(np.count_nonzero(np.asarray(comp.dense()))) <= k
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=_dims, rate=_rates, seed=_seeds)
+def test_ef_conservation_invariant(d, rate, seed):
+    """∀ g, r:  C(g+r).dense() + r' == g + r  (error feedback loses nothing)."""
+    rng = np.random.RandomState(seed)
+    g = jnp.asarray(rng.randn(d).astype(np.float32))
+    r = jnp.asarray(rng.randn(d).astype(np.float32) * 0.3)
+    comp, new_r = C.ef_compress(C.make_compressor("topk", rate), g, r)
+    np.testing.assert_allclose(np.asarray(comp.dense() + new_r),
+                               np.asarray(g + r), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=_dims, rate=_rates, seed=_seeds)
+def test_compression_never_increases_norm(d, rate, seed):
+    g = jnp.asarray(np.random.RandomState(seed).randn(d).astype(np.float32))
+    comp = C.topk(g, rate)
+    assert float(jnp.linalg.norm(comp.dense())) \
+        <= float(jnp.linalg.norm(g)) + 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(alpha=st.floats(0.001, 1.0), beta=st.floats(0.1, 100.0),
+       k=st.integers(1, 50), delta=st.floats(1e-3, 1.0))
+def test_solver_dominates_random_point(alpha, beta, k, delta):
+    """φ(plan) ≤ φ(any feasible point) — Eq. 15 optimality."""
+    plan = solve_plan(alpha, beta, 1.0, k_bounds=(1, 50),
+                      delta_bounds=(1e-3, 1.0))
+    assert plan.phi <= phi(k, delta, alpha, beta, 1.0) * 1.005
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(40, 400), clients=st.integers(2, 8), seed=_seeds)
+def test_iid_partition_is_exact_cover(n, clients, seed):
+    parts = iid_partition(n, clients, seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == n
+    assert len(np.unique(allidx)) == n
+
+
+@settings(max_examples=10, deadline=None)
+@given(clients=st.integers(2, 6), seed=_seeds)
+def test_dirichlet_partition_is_exact_cover(clients, seed):
+    labels = np.random.RandomState(seed).randint(0, 5, 600)
+    parts = dirichlet_partition(labels, clients, alpha=1.0, seed=seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 600
+    assert len(np.unique(allidx)) == 600
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 6), seed=_seeds)
+def test_periodic_aggregation_is_mean_update(n, seed):
+    """Eq. 6: the global update equals −η_g · mean(updates)."""
+    rng = np.random.RandomState(seed)
+    w0 = rng.randn(16).astype(np.float32)
+    m = GlobalModel(w0, eta_g=0.7)
+    agg = PeriodicAggregator(m)
+    ups = [rng.randn(16).astype(np.float32) for _ in range(n)]
+    for i, u in enumerate(ups):
+        agg.on_arrival(0.1 * i, Arrival(i, u, 0, 1.0, 0.1 * i))
+    agg.on_round_boundary(1.0)
+    np.testing.assert_allclose(m.w, w0 - 0.7 * np.mean(ups, axis=0),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=st.integers(64, 4096), rate=st.floats(0.01, 0.5), seed=_seeds)
+def test_threshold_pipeline_matches_ef_invariant(d, rate, seed):
+    """The Pallas pipeline obeys the same conservation law as the oracle."""
+    from repro.kernels import ops
+    rng = np.random.RandomState(seed)
+    g = jnp.asarray(rng.randn(d).astype(np.float32))
+    r = jnp.asarray(rng.randn(d).astype(np.float32) * 0.2)
+    out, new_r, nnz, _ = ops.topk_compress(g, r, rate=rate, block=1024,
+                                           interpret=True)
+    np.testing.assert_allclose(np.asarray(out + new_r), np.asarray(g + r),
+                               rtol=1e-5, atol=1e-5)
+    assert float(nnz) <= C.num_keep(d, rate) + 1

@@ -1,0 +1,110 @@
+import numpy as np
+import pytest
+
+from repro.core.controller import DeviceProfile, FedLuckController
+from repro.core.simulator import (AFLSimulator, DeviceSpec,
+                                  STRATEGY_FOR_METHOD,
+                                  make_heterogeneous_devices, plan_devices)
+from repro.core.factor import Plan
+from repro.models.small import make_task
+
+
+@pytest.fixture(scope="module")
+def task():
+    return make_task("mlp_fmnist", num_samples=1200, test_samples=300,
+                     batch_size=32)
+
+
+def _profiles(n=4, model_bits=3.2e6):
+    return make_heterogeneous_devices(n, model_bits, base_alpha=0.02, seed=0)
+
+
+class TestPlanning:
+    def test_heterogeneous_devices_get_distinct_plans(self):
+        profs = _profiles(6)
+        specs = plan_devices(profs, "fedluck", round_period=1.0)
+        ks = {s.plan.k for s in specs}
+        ds = {round(s.plan.delta, 5) for s in specs}
+        assert len(ks) > 1 or len(ds) > 1  # heterogeneity → different plans
+
+    def test_fedper_uniform(self):
+        specs = plan_devices(_profiles(4), "fedper", 1.0, fixed_k=7,
+                             fixed_delta=0.2)
+        assert all(s.plan.k == 7 and s.plan.delta == 0.2 for s in specs)
+
+    def test_uncompressed_baselines_full_rate(self):
+        specs = plan_devices(_profiles(4), "fedasync", 1.0, fixed_k=5)
+        assert all(s.rate == 1.0 for s in specs)
+
+
+class TestSimulation:
+    def test_fedluck_converges(self, task):
+        specs = plan_devices(_profiles(4), "fedluck", 1.0, k_bounds=(1, 10))
+        sim = AFLSimulator(task, specs, "periodic", round_period=1.0,
+                           eta_l=0.05, seed=0)
+        h = sim.run(total_rounds=15, eval_every=3)
+        assert h.final_accuracy() > 0.8
+        assert h.records[-1].gbits > 0
+
+    def test_time_and_bits_accounting(self, task):
+        """Comm bits follow the paper model: rate · d · 32 per upload."""
+        profs = _profiles(2)
+        plan = Plan(3, 0.125, 0.0, 1.0, 1)
+        specs = [DeviceSpec(p, plan, "topk") for p in profs]
+        sim = AFLSimulator(task, specs, "periodic", round_period=10.0,
+                           seed=0)
+        h = sim.run(total_rounds=1, eval_every=1)
+        d = sim.dim
+        per_upload = 0.125 * d * 32
+        total = sim.agg.total_bits
+        assert total > 0 and total % per_upload == 0
+
+    def test_staleness_matches_ceil_formula(self, task):
+        """τ = ceil(d_i / T̃) for a device slower than the round period."""
+        prof = DeviceProfile(0, alpha=0.5, beta=2.0)   # d = 3·0.5+1·2=3.5
+        plan = Plan(3, 1.0, 0.0, 3.5, 4)
+        spec = DeviceSpec(prof, plan, "none")
+        sim = AFLSimulator(task, [spec], "periodic", round_period=1.0,
+                           seed=0)
+        sim.run(total_rounds=9, eval_every=0)
+        stal = [s for s in sim.agg.staleness_log if s > 0]
+        assert stal and max(stal) == int(np.ceil(3.5 / 1.0))
+
+    @pytest.mark.parametrize("method", ["fedper", "fedbuff", "fedasync",
+                                        "fedavg_topk"])
+    def test_all_baselines_run(self, task, method):
+        specs = plan_devices(_profiles(3), method, 1.0, fixed_k=3,
+                             fixed_delta=0.1)
+        kw = {"strategy_kwargs": {"buffer_size": 2}} \
+            if method == "fedbuff" else {}
+        sim = AFLSimulator(task, specs, STRATEGY_FOR_METHOD[method],
+                           round_period=1.0, seed=0, **kw)
+        h = sim.run(total_rounds=8, eval_every=4)
+        assert len(h.records) >= 1
+        assert np.isfinite(h.final_accuracy())
+
+
+class TestController:
+    def test_elastic_membership(self):
+        ctl = FedLuckController(round_period=1.0)
+        p1 = ctl.register(DeviceProfile(0, 0.02, 10.0))
+        ctl.register(DeviceProfile(1, 0.08, 30.0))
+        assert ctl.max_staleness() >= 0
+        ctl.deregister(1)
+        assert list(ctl.plans()) == [0]
+        assert ctl.plan(0) == p1
+
+    def test_replan_on_drift(self):
+        ctl = FedLuckController(round_period=1.0, replan_tolerance=0.25)
+        p0 = ctl.register(DeviceProfile(0, 0.02, 10.0))
+        same = ctl.update_profile(DeviceProfile(0, 0.021, 10.0))  # 5% drift
+        assert same == p0
+        new = ctl.update_profile(DeviceProfile(0, 0.2, 10.0))     # 10x drift
+        assert new.k <= p0.k
+
+    def test_modes_match_table2_baselines(self):
+        prof = DeviceProfile(0, 0.05, 25.0)
+        cr = FedLuckController(1.0, mode="fixed_k", fixed_k=12)
+        lf = FedLuckController(1.0, mode="fixed_delta", fixed_delta=0.05)
+        assert cr.register(prof).k == 12
+        assert lf.register(prof).delta == 0.05

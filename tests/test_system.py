@@ -1,0 +1,119 @@
+"""End-to-end behaviour tests for the paper's system: FedLuck's claims hold
+qualitatively on the simulator (joint adaptation beats fixed settings and
+single-factor optimization), and the full train driver restarts cleanly."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import compression as C
+from repro.core.simulator import (AFLSimulator, STRATEGY_FOR_METHOD,
+                                  make_heterogeneous_devices, plan_devices)
+from repro.models.small import make_task
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    task = make_task("mlp_fmnist", num_samples=2000, test_samples=400,
+                     batch_size=32, noise=1.2)
+    import jax
+    params = task.init_fn(jax.random.PRNGKey(0))
+    flat, _ = C.flatten_pytree(params)
+    profiles = make_heterogeneous_devices(5, flat.size * 32,
+                                          base_alpha=0.02, seed=0)
+    return task, profiles
+
+
+def _run(task, profiles, method, rounds=40, **kw):
+    specs = plan_devices(profiles, method, 1.0, k_bounds=(1, 20),
+                         fixed_k=5, fixed_delta=0.1, **kw)
+    skw = {"strategy_kwargs": {"buffer_size": 3}} if method == "fedbuff" \
+        else {}
+    sim = AFLSimulator(task, specs, STRATEGY_FOR_METHOD[method],
+                       round_period=1.0, eta_l=0.05, seed=0, **skw)
+    return sim.run(total_rounds=rounds, eval_every=2)
+
+
+class TestPaperClaims:
+    def test_fedluck_competitive_time_to_accuracy(self, setup):
+        """Fig. 2: FedLuck reaches the target no slower than FedPer and
+        FedAvg+TopK (relative claim, synthetic stand-in data)."""
+        task, profiles = setup
+        target = 0.75
+        t_luck = _run(task, profiles, "fedluck").time_to_accuracy(target)
+        t_per = _run(task, profiles, "fedper").time_to_accuracy(target)
+        t_avg = _run(task, profiles, "fedavg_topk").time_to_accuracy(target)
+        assert t_luck is not None
+        assert t_per is None or t_luck <= t_per * 1.05
+        assert t_avg is None or t_luck <= t_avg * 1.05
+
+    def test_fedluck_beats_uncompressed_baselines_on_comm(self, setup):
+        """Fig. 3: communication to target accuracy well below FedBuff /
+        FedAsync (which ship full gradients)."""
+        task, profiles = setup
+        target = 0.75
+        b_luck = _run(task, profiles, "fedluck").bits_to_accuracy(target)
+        b_buff = _run(task, profiles, "fedbuff").bits_to_accuracy(target)
+        b_async = _run(task, profiles, "fedasync").bits_to_accuracy(target)
+        assert b_luck is not None
+        for other in (b_buff, b_async):
+            if other is not None:
+                assert b_luck < other * 0.6   # ≥40% comm saving
+
+    def test_joint_beats_single_factor(self, setup):
+        """Tab. 2: joint (k, δ) optimization ≥ Opt.CR / Opt.LF on final
+        accuracy at a fixed simulated-time budget."""
+        task, profiles = setup
+        rounds = 20
+        acc_joint = _run(task, profiles, "fedluck", rounds).final_accuracy()
+        acc_cr = _run(task, profiles, "opt_cr", rounds).final_accuracy()
+        acc_lf = _run(task, profiles, "opt_lf", rounds).final_accuracy()
+        assert acc_joint >= acc_cr - 0.03
+        assert acc_joint >= acc_lf - 0.03
+
+    def test_noniid_still_converges(self, setup):
+        """Tab. 1 setting: Dirichlet(1.0) partitions."""
+        from repro.data.partition import dirichlet_partition
+        task, profiles = setup
+        idx = dirichlet_partition(task.dataset.labels, len(profiles),
+                                  alpha=1.0, seed=0)
+        specs = plan_devices(profiles, "fedluck", 1.0, k_bounds=(1, 20))
+        sim = AFLSimulator(task, specs, "periodic", round_period=1.0,
+                           eta_l=0.05, seed=0, client_indices=idx)
+        h = sim.run(total_rounds=25, eval_every=5)
+        assert h.final_accuracy() > 0.75
+
+
+class TestDrivers:
+    def test_train_cli_checkpoint_restart(self, tmp_path):
+        """Kill-and-resume: second invocation continues from the saved
+        round instead of restarting from 0."""
+        ck = str(tmp_path / "ck")
+        env = dict(os.environ, PYTHONPATH=SRC)
+        base = [sys.executable, "-m", "repro.launch.train", "--task",
+                "mlp_fmnist", "--method", "fedluck", "--devices", "3",
+                "--samples", "1200", "--test-samples", "200",
+                "--ckpt-dir", ck, "--ckpt-every", "4", "--eval-every", "2",
+                "--k-max", "8"]
+        r1 = subprocess.run(base + ["--rounds", "8"], capture_output=True,
+                            text=True, env=env, timeout=600)
+        assert r1.returncode == 0, r1.stderr[-2000:]
+        r2 = subprocess.run(base + ["--rounds", "12", "--resume"],
+                            capture_output=True, text=True, env=env,
+                            timeout=600)
+        assert r2.returncode == 0, r2.stderr[-2000:]
+        assert "resumed from round" in r2.stdout
+
+    def test_serve_cli(self):
+        env = dict(os.environ, PYTHONPATH=SRC)
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "--arch",
+             "mamba2-780m", "--requests", "2", "--batch", "2",
+             "--prompt-len", "8", "--gen", "4"],
+            capture_output=True, text=True, env=env, timeout=600)
+        assert r.returncode == 0, r.stderr[-2000:]
+        assert "tokens_per_s" in r.stdout
