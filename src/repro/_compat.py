@@ -1,0 +1,76 @@
+"""Back-port shims for newer jax APIs onto the pinned toolchain (0.4.37).
+
+The codebase (and the dist test suite) is written against the current jax
+sharding surface: `jax.sharding.AxisType`, `jax.make_mesh(..., axis_types=)`,
+`jax.set_mesh`, and top-level `jax.shard_map` with `axis_names=`/`check_vma=`.
+The container pins jax 0.4.37, which predates all four. `install()` adds the
+missing attributes — it only ever fills gaps (every patch is hasattr-guarded),
+so on a newer jax it is a no-op and the native implementations win.
+
+Semantics notes for the back-ports:
+  - AxisType.Auto is the only mode this repo uses; on 0.4.37 every mesh axis
+    is GSPMD-auto under jit, so accepting-and-dropping `axis_types` is exact.
+  - `set_mesh(mesh)` returns the mesh itself, which is already a context
+    manager, so `with jax.set_mesh(mesh): ...` scopes the resource env the
+    same way the new global-mesh API does for this repo's usage.
+  - `shard_map(..., axis_names=S, check_vma=v)` maps onto the classic
+    `jax.experimental.shard_map.shard_map(f, mesh, ..., check_rep=v,
+    auto=mesh_axes - S)`, resolving the mesh from the ambient resource env
+    when not passed explicitly.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+class _AxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _context_mesh():
+    from jax._src.mesh import thread_resources
+    m = thread_resources.env.physical_mesh
+    if m.empty:
+        raise ValueError(
+            "shard_map shim: no mesh in context — pass mesh= explicitly or "
+            "wrap the call in `with mesh:` / `with jax.set_mesh(mesh):`")
+    return m
+
+
+def _shard_map(f, *, mesh=None, in_specs, out_specs, axis_names=None,
+               check_vma=True):
+    from jax.experimental.shard_map import shard_map as _sm
+    m = mesh if mesh is not None else _context_mesh()
+    kw = {"check_rep": bool(check_vma)}
+    if axis_names is not None:
+        auto = frozenset(m.axis_names) - frozenset(axis_names)
+        if auto:
+            kw["auto"] = auto
+    return _sm(f, m, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def install() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _native_make_mesh = jax.make_mesh
+
+        @functools.wraps(_native_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+            del axis_types  # 0.4.37: every axis is GSPMD-auto under jit
+            return _native_make_mesh(axis_shapes, axis_names, **kw)
+
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = lambda mesh: mesh  # Mesh is itself a context manager
+
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _shard_map

@@ -256,10 +256,12 @@ class AFLSimulator:
             push(self.round_period, "boundary", 1)
 
         evals_done = 0
+        last_t = 0.0
         while heap:
             t, _, kind, payload = heapq.heappop(heap)
             if t > max_sim_time or self.model.round >= total_rounds:
                 break
+            last_t = t
 
             if kind == "start":
                 did, mr = payload
@@ -278,8 +280,6 @@ class AFLSimulator:
             elif kind == "arrival":
                 a: Arrival = payload
                 events = self.agg.on_arrival(t, a)
-                if not periodic and not events and not syncb:
-                    pass
                 for ev in events:
                     for did in ev.release_to:
                         push(ev.time, "start", (did, self.model.round))
@@ -305,7 +305,10 @@ class AFLSimulator:
                     self._eval(hist, t)
                     evals_done += 1
 
-        self._eval(hist, t if heap else max_sim_time)
+        # closing record: the break-event time when we stopped early, else
+        # the LAST PROCESSED event time — never max_sim_time, which is inf
+        # by default and would poison History.time_to_accuracy.
+        self._eval(hist, t if heap else last_t)
         return hist
 
     def _eval(self, hist: History, t: float):

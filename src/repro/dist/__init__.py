@@ -1,0 +1,17 @@
+"""Sharded-execution layer: maps FedLuck's joint (k, δ) scheme onto a
+(pod, data, model) device mesh.
+
+  sharding     FSDP/TP PartitionSpec rules for every pytree the launchers
+               move (params, optimizer state, batches, KV caches)
+  steps        jit-able train / local-round / prefill / decode step builders
+  collectives  the Eq. 6 cross-pod sync (EF top-k sparse reduce) and the
+               δ-adaptive sparse/dense wire-cost model
+
+Everything here is GSPMD-first: the step functions are ordinary pure
+functions and the launchers pin layouts with `sharding.named(...)` at the
+jit boundary, so the same code runs on one CPU device, the 8-device test
+mesh, and the 2×16×16 production mesh.
+"""
+from repro.dist import collectives, sharding, steps
+
+__all__ = ["collectives", "sharding", "steps"]

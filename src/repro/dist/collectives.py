@@ -1,0 +1,98 @@
+"""Cross-pod sync: FedLuck Eq. 6 as a δ-adaptive EF top-k sparse reduce.
+
+Each pod finishes its k local steps with a pseudo-gradient delta (Eq. 4);
+the sync compresses every pod's EF accumulator (delta + residual) to
+density δ and applies the server rule
+
+    w  ←  w − η_g · mean_pods(kept)          (Eq. 6)
+    r' =  (delta + r) − kept                 (error feedback)
+
+The wire format is δ-adaptive (DESIGN.md §4): below the density crossover
+the kept entries ship as a (values, indices) sparse all-gather; above it a
+dense ring all-reduce is cheaper and the compression only serves the EF
+contract. `make_pod_sync` picks the path at build time from the static
+rate — the sparse path thresholds per (pod, block) with `lax.top_k` (the
+layout the sharded all-gather needs: every in-pod chip owns whole blocks),
+the dense path reuses the exact global threshold pipeline from
+`repro.kernels.ops.topk_compress`.
+
+`all_gather_bytes` / `density_crossover` are the analytic wire-cost model
+(benchmarks/kernel_bench.py plots the crossover).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+VALUE_BYTES = 4   # fp32 payload
+INDEX_BYTES = 4   # int32 in-block offset
+
+
+def density_crossover(n_pods: int, *, value_bytes: int = VALUE_BYTES,
+                      index_bytes: int = INDEX_BYTES) -> float:
+    """Density δ* where sparse all-gather bytes == dense ring all-reduce
+    bytes. Sparse ships (P−1)·δ·d·(val+idx) per device; the ring costs
+    2·(P−1)/P·d·val. With 4-byte values/indices δ* = 1/P."""
+    return 2.0 * value_bytes / (n_pods * (value_bytes + index_bytes))
+
+
+def all_gather_bytes(dim: int, n_pods: int, rate: float, *,
+                     value_bytes: int = VALUE_BYTES,
+                     index_bytes: int = INDEX_BYTES) -> float:
+    """Per-device wire bytes of one Eq. 6 sync at density `rate` — the
+    cheaper of the sparse gather and the dense ring all-reduce."""
+    k = max(1.0, round(rate * dim))
+    sparse = (n_pods - 1) * k * (value_bytes + index_bytes)
+    dense = 2.0 * (n_pods - 1) / n_pods * dim * value_bytes
+    return float(min(sparse, dense))
+
+
+def make_pod_sync(mesh, dim: int, *, rate: float, eta_g: float = 1.0,
+                  n_blocks: int):
+    """Build sync(params, deltas, residuals) -> (new_params, new_residuals).
+
+    params     [n_blocks, blk]            global model (flat, blocked)
+    deltas     [n_pods, n_blocks, blk]    per-pod Eq. 4 pseudo-gradients
+    residuals  [n_pods, n_blocks, blk]    per-pod EF carry
+
+    dim = n_blocks · blk; the blocked 2D layout shards n_blocks over the
+    in-pod axes and the pod dim over `pod`, so the mean over pods lowers
+    to the cross-pod collective.
+    """
+    n_pods = int(mesh.shape["pod"]) if "pod" in mesh.shape else 1
+    if dim % n_blocks != 0:
+        raise ValueError(f"dim={dim} not divisible by n_blocks={n_blocks}")
+    blk = dim // n_blocks
+    sparse = rate < density_crossover(max(n_pods, 2))
+
+    def compress_sparse(acc):
+        # per-(pod, block) budget: every chip thresholds the blocks it owns
+        # locally — no cross-chip threshold traffic, bounded deferral of
+        # over-budget blocks' entries to the next round via EF.
+        kb = max(1, min(blk, round(rate * blk)))
+        mags = jnp.abs(acc)
+        thr = jax.lax.top_k(mags, kb)[0][..., -1:]
+        return jnp.where(mags >= thr, acc, 0.0)
+
+    def compress_dense(acc_p, res_p):
+        # exact global threshold via the Pallas histogram pipeline
+        out, _, _, _ = ops.topk_compress(
+            (acc_p - res_p).reshape(dim), res_p.reshape(dim), rate=rate)
+        return out.reshape(n_blocks, blk)
+
+    def sync(params, deltas, residuals):
+        acc = deltas.astype(jnp.float32) + residuals.astype(jnp.float32)
+        if sparse:
+            kept = compress_sparse(acc)
+        else:
+            kept = jnp.stack([
+                compress_dense(acc[p], residuals[p].astype(jnp.float32))
+                for p in range(max(n_pods, 1))])
+        new_residuals = acc - kept
+        update = jnp.mean(kept, axis=0)          # Eq. 6 cross-pod reduce
+        new_params = params - eta_g * update
+        return new_params, new_residuals
+
+    return sync

@@ -1,0 +1,181 @@
+"""PartitionSpec rules for the (pod, data, model) mesh.
+
+One rule table covers every assigned family (dense, MoE, SSM, hybrid,
+audio, vlm). Conventions (DESIGN.md §2, asserted by tests/test_dist.py):
+
+  params   FSDP over `data` on the d_model ("in") dim, tensor parallel over
+           `model` on the feature ("out") dim; transpose layout for the
+           output projections (wo / w_down / fc2 / out_proj) so the TP
+           partial-sums reduce over `model`. The embedding shards vocab
+           over `model` and d_model over `data`. MoE experts are
+           TP-in-expert: [L, E, d(fsdp), f(model)] / w_down transposed,
+           router replicated (the sharded dispatch broadcasts it — see
+           repro.models.moe:105).
+  opt      mirrors the param layout leaf-for-leaf (momentum / adam moments
+           have param shapes); scalar counters replicate.
+  batch    leading (batch) dim over the batch axes, rest replicated.
+  cache    KV cache [L, B, S, KV, hd]: batch over the batch axes and the
+           SEQUENCE dim over `model` (flash-decoding layout); SSM state is
+           batch-sharded only.
+
+Every rule is guarded by divisibility: an axis that does not evenly divide
+its dim is dropped (replicated) rather than producing an invalid layout —
+this is what lets the same rules serve smoke configs on a 2×4 test mesh
+and full configs on 16×16 pods. `fsdp_axis` may be a tuple of mesh axes
+(the pure-DP ZeRO-3 layout shards weights over the whole mesh) and
+`model_axis` may be None (no TP).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_FSDP, _TP = "fsdp", "tp"
+
+# Projections whose kernel is [in(d_model → fsdp), out(features → tp)].
+_IN_KERNELS = ("wq", "wk", "wv", "w_gate", "w_up", "fc1", "in_proj",
+               "head", "frontend", "patch_proj", "wi", "wh")
+# Output projections: [in(features → tp), out(d_model → fsdp)].
+_OUT_KERNELS = ("wo", "w_down", "fc2", "out_proj")
+# Cache leaves carrying a sequence dim at index 2 ([L, B, S, ...]).
+_SEQ_CACHE = ("k", "v", "k_scale", "v_scale")
+
+
+def _path_names(path) -> tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def _roles(names: tuple[str, ...]) -> tuple:
+    """Trailing-dim role tags for one param leaf; leading dims (the [L, ...]
+    layer stack, the MoE [E, ...] expert dim) are padded to replicated."""
+    last = names[-1] if names else ""
+    parent = names[-2] if len(names) > 1 else ""
+    if last == "embedding":
+        return (_TP, _FSDP)                      # [V(model), d(data)]
+    if parent == "moe":                          # raw [E, d, f] expert stacks
+        if last in ("w_gate", "w_up"):
+            return (_FSDP, _TP)
+        if last == "w_down":
+            return (_TP, _FSDP)
+        return ()                                # router handled via "kernel"
+    if last == "kernel":
+        if parent in _IN_KERNELS:
+            return (_FSDP, _TP)
+        if parent in _OUT_KERNELS:
+            return (_TP, _FSDP)
+    return ()                                    # norms, biases, SSM scalars,
+                                                 # router: replicated
+
+
+def _axis_size(axis, mesh) -> int | None:
+    """Total shard count of a mesh-axis entry (str or tuple); None if any
+    named axis is absent from this mesh."""
+    axes = axis if isinstance(axis, (tuple, list)) else (axis,)
+    n = 1
+    for a in axes:
+        if a not in mesh.shape:
+            return None
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(axis, dim: int, mesh):
+    """The axis entry if it exists and evenly divides `dim`, else None."""
+    if axis is None:
+        return None
+    n = _axis_size(axis, mesh)
+    if n is None or n <= 1 or dim % n != 0:
+        return None
+    return tuple(axis) if isinstance(axis, (tuple, list)) else axis
+
+
+def _resolve(roles: tuple, shape, mesh, fsdp_axis, model_axis) -> P:
+    ndim = len(shape)
+    roles = roles[-ndim:] if len(roles) > ndim else roles
+    roles = (None,) * (ndim - len(roles)) + tuple(roles)
+    entries = []
+    for dim, role in zip(shape, roles):
+        axis = fsdp_axis if role == _FSDP else \
+            model_axis if role == _TP else None
+        entries.append(_fit(axis, dim, mesh))
+    return P(*entries)
+
+
+# ------------------------------------------------------------------- params
+def param_specs(params, mesh, *, fsdp_axis="data", model_axis="model"):
+    """PartitionSpec pytree mirroring `params` (arrays or ShapeDtypeStructs,
+    e.g. from `jax.eval_shape(lm.init, key)`)."""
+    def one(path, leaf):
+        return _resolve(_roles(_path_names(path)), leaf.shape, mesh,
+                        fsdp_axis, model_axis)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# -------------------------------------------------------------------- opt
+def opt_state_specs(opt_state, pspecs, mesh):
+    """Optimizer-state specs: any sub-tree that is param-shaped (momentum
+    buffers, adam moments, master copies) inherits the param layout;
+    everything else (step counters) replicates."""
+    del mesh  # shapes match params, so the divisibility guard carries over
+    is_p = lambda x: isinstance(x, P)
+    pdef = jax.tree_util.tree_structure(pspecs, is_leaf=is_p)
+
+    def one(sub):
+        if jax.tree_util.tree_structure(sub) == pdef:
+            return pspecs
+        return jax.tree.map(lambda l: P(*[None] * getattr(l, "ndim", 0)), sub)
+
+    if isinstance(opt_state, dict):
+        return {k: one(v) for k, v in opt_state.items()}
+    return one(opt_state)
+
+
+# ------------------------------------------------------------------- batch
+def batch_specs(batch, mesh, *, batch_axes=("data",)):
+    """Shard every leaf's leading dim over `batch_axes` when divisible."""
+    baxes = tuple(a for a in batch_axes if a in mesh.shape)
+    n = _axis_size(baxes, mesh) if baxes else 1
+
+    def one(leaf):
+        shape = leaf.shape
+        if shape and n and n > 1 and shape[0] % n == 0:
+            return P(baxes, *[None] * (len(shape) - 1))
+        return P(*[None] * len(shape))
+
+    return jax.tree.map(one, batch)
+
+
+# ------------------------------------------------------------------- cache
+def cache_specs(cache, mesh, *, batch_axes=("data",), seq_axis="model"):
+    """Decode/prefill cache layout: [L, B(batch), S(model), ...] for KV
+    leaves (flash-decoding: the length-S reduction is sequence-sharded over
+    `model`), batch-only for SSM state/conv leaves."""
+    baxes = tuple(a for a in batch_axes if a in mesh.shape)
+    nb = _axis_size(baxes, mesh) if baxes else 1
+
+    def one(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        entries = [None] * len(shape)
+        if len(shape) >= 2 and nb and nb > 1 and shape[1] % nb == 0:
+            entries[1] = baxes
+        if names and names[-1] in _SEQ_CACHE and len(shape) >= 3:
+            entries[2] = _fit(seq_axis, shape[2], mesh)
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+# ------------------------------------------------------------------- named
+def named(tree, mesh):
+    """PartitionSpec pytree (or a single P) → NamedSharding pytree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -79,6 +79,14 @@ def parse_collectives(hlo_text: str) -> dict:
     return out
 
 
+def _cost_dict(ca) -> dict:
+    """compiled.cost_analysis() returns a dict on current jax but a
+    per-computation list on 0.4.x — normalize to the dict."""
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 # ------------------------------------------------------------- cell execution
 def run_cell(arch: str, shape: str, mesh_kind: str, *, verbose: bool = True,
              step_override: str | None = None, zero3: bool = False,
@@ -196,7 +204,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *, verbose: bool = True,
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled.cost_analysis())
     coll = parse_collectives(compiled.as_text())
 
     # ---- cost extrapolation: HLO cost analysis visits a while-loop (scan)
@@ -206,7 +214,8 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *, verbose: bool = True,
     t1 = time.time()
     c1 = lower_one(_dc.replace(cfg, n_layers=1), use_scan=False)
     c2 = lower_one(_dc.replace(cfg, n_layers=2), use_scan=False)
-    cost1, cost2 = c1.cost_analysis(), c2.cost_analysis()
+    cost1 = _cost_dict(c1.cost_analysis())
+    cost2 = _cost_dict(c2.cost_analysis())
     coll1 = parse_collectives(c1.as_text())
     coll2 = parse_collectives(c2.as_text())
     L = cfg.n_layers
@@ -296,7 +305,7 @@ def run_sync_step(arch: str, *, rate: float = 0.01, verbose=True) -> dict:
             p_sds, d_sds, d_sds)
         compiled = lowered.compile()
     coll = parse_collectives(compiled.as_text())
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled.cost_analysis())
     res = {"arch": arch, "kind": "fedluck_sync", "rate": rate, "dim": dim_p,
            "status": "ok", "compile_s": round(time.time() - t0, 1),
            "collectives": coll,

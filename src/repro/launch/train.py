@@ -33,6 +33,31 @@ import numpy as np
 
 
 # --------------------------------------------------------------------- FL mode
+def fl_ckpt_state(sim) -> dict:
+    """FL checkpoint payload: global model + round + per-device EF
+    residuals (without the residuals, a resumed error-feedback run silently
+    re-drops every deferred coordinate and diverges from the uninterrupted
+    run)."""
+    state = {"w": np.asarray(sim.model.w),
+             "round": np.asarray(sim.model.round)}
+    if sim._residuals:
+        dids = sorted(sim._residuals)
+        state["residual_ids"] = np.asarray(dids, np.int64)
+        state["residuals"] = np.stack(
+            [sim._residuals[d] for d in dids])
+    return state
+
+
+def restore_fl_state(sim, state) -> None:
+    sim.model.w = np.asarray(state["w"])
+    sim.model.round = int(state["round"])
+    if "residuals" in state:
+        res = np.asarray(state["residuals"])
+        dids = np.asarray(state["residual_ids"]).tolist()
+        for i, did in enumerate(dids):
+            sim._residuals[int(did)] = res[i].astype(np.float32)
+
+
 def run_fl(args) -> dict:
     import jax
     import jax.numpy as jnp
@@ -56,7 +81,8 @@ def run_fl(args) -> dict:
         args.devices, model_bits, base_alpha=args.base_alpha, seed=args.seed)
     specs = plan_devices(profiles, args.method, args.round_period,
                          k_bounds=(1, args.k_max), fixed_k=args.fixed_k,
-                         fixed_delta=args.fixed_delta)
+                         fixed_delta=args.fixed_delta,
+                         error_feedback=args.error_feedback)
     if args.noniid:
         idx = dirichlet_partition(task.dataset.labels, args.devices,
                                   alpha=1.0, seed=args.seed)
@@ -79,8 +105,7 @@ def run_fl(args) -> dict:
         latest = mgr.latest_step()
         if latest is not None:
             state = mgr.restore(latest)
-            sim.model.w = state["w"]
-            sim.model.round = int(state["round"])
+            restore_fl_state(sim, state)
             start_round = int(state["round"])
             print(f"[train] resumed from round {start_round}")
 
@@ -93,14 +118,16 @@ def run_fl(args) -> dict:
         hist = sim.run(total_rounds=target, eval_every=args.eval_every)
         hist_all.extend(hist.records)
         if mgr:
-            mgr.save(sim.model.round,
-                     {"w": sim.model.w,
-                      "round": np.asarray(sim.model.round)})
+            mgr.save(sim.model.round, fl_ckpt_state(sim))
             mgr.wait()
         r = hist.records[-1]
         print(f"[train] round={sim.model.round} acc={r.accuracy:.3f} "
               f"sim_t={r.time:.1f}s comm={r.gbits:.3f}Gb "
               f"wall={time.time()-t0:.0f}s")
+    if not hist_all:
+        # resumed at/past the target round: nothing to train, just eval
+        hist_all.extend(
+            sim.run(total_rounds=sim.model.round, eval_every=1).records)
     final = hist_all[-1]
     return {"final_accuracy": final.accuracy, "rounds": sim.model.round,
             "gbits": final.gbits, "sim_time": final.time}
@@ -219,6 +246,7 @@ def main(argv=None):
     ap.add_argument("--test-samples", type=int, default=800)
     ap.add_argument("--batch-size", type=int, default=32)
     ap.add_argument("--noise", type=float, default=None)
+    ap.add_argument("--error-feedback", action="store_true")
     ap.add_argument("--noniid", action="store_true")
     ap.add_argument("--inject-failures", action="store_true")
     ap.add_argument("--eval-every", type=int, default=2)

@@ -108,3 +108,22 @@ class TestController:
         lf = FedLuckController(1.0, mode="fixed_delta", fixed_delta=0.05)
         assert cr.register(prof).k == 12
         assert lf.register(prof).delta == 0.05
+
+
+class TestFinalRecordTime:
+    def test_heap_drain_final_record_is_finite(self, task):
+        """sync strategy with deadline=0 drops the only arrival and releases
+        nobody -> the event heap drains before total_rounds with the default
+        max_sim_time=inf; the closing History record must carry the last
+        processed event time, not inf."""
+        import math
+
+        prof = DeviceProfile(0, alpha=0.1, beta=1.0)
+        plan = Plan(2, 1.0, 0.0, 1.2, 0)
+        spec = DeviceSpec(prof, plan, "none")
+        sim = AFLSimulator(task, [spec], "sync",
+                           strategy_kwargs={"deadline": 0.0})
+        h = sim.run(total_rounds=5, eval_every=1)
+        assert h.records
+        assert all(math.isfinite(r.time) for r in h.records)
+        assert h.records[-1].time > 0.0
