@@ -14,6 +14,7 @@ def main() -> None:
                                          fig3_comm_consumption, tab1_noniid,
                                          tab2_joint_vs_single)
     from benchmarks.kernel_bench import kernel_microbench, sync_crossover
+    from benchmarks.sim_bench import smoke_rows as sim_smoke_rows
 
     benches = {
         "fig1": fig1_motivation_grid,
@@ -23,6 +24,7 @@ def main() -> None:
         "tab2": tab2_joint_vs_single,
         "kernels": kernel_microbench,
         "sync": sync_crossover,
+        "sim": sim_smoke_rows,
     }
     picks = sys.argv[1:] or list(benches)
     print("name,us_per_call,derived")

@@ -1,0 +1,187 @@
+"""Simulator throughput benchmark: events/sec and wall-clock per sim-second.
+
+Measures the batched device-resident engine (`AFLSimulator(engine="batched")`)
+against the sequential pre-batching reference path on periodic-FedLuck
+fleets, and emits `BENCH_simulator.json` — the perf-trajectory baseline the
+ROADMAP simulator-performance item calls for.
+
+  PYTHONPATH=src python benchmarks/sim_bench.py                # full run
+  PYTHONPATH=src python benchmarks/sim_bench.py --smoke        # tiny CI fleet
+  PYTHONPATH=src python benchmarks/sim_bench.py --out BENCH_simulator.json
+
+Methodology: every measurement is steady-state — a short warmup segment
+first runs both engines through their jit compiles, then the reported
+`wall_s` covers exactly `rounds` simulated rounds. Warmup wall time is
+reported separately as `warm_s`.
+
+The headline is the engine-throughput configuration: a 100-device /
+50-round periodic-FedLuck fleet on the compute-light `mlp_micro` task with
+slow edge devices (base_alpha=0.2 → small k*). Per-cycle model compute is
+negligible there, so the number isolates what this benchmark is about —
+event-loop + dispatch throughput, where the batched engine must beat the
+sequential path by >= 5x. The fleet sweep adds 10/50/200-device scaling
+rows plus a compute-bound `mlp_fmnist` row (where both engines spend most
+wall time in identical local-round FLOPs on one core, so the honest
+speedup is small) and an error-feedback row exercising the device-resident
+stacked-residual path.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+# plan-time k grid: collapses the number of distinct compiled local-round
+# shapes (the batched engine jits one vmapped cycle per (k, bucket) pair)
+K_GRID = [1, 2, 3, 4, 6, 8, 12, 16, 24, 30]
+
+
+def _build_sim(engine: str, num_devices: int, *, task, seed: int = 0,
+               error_feedback: bool = False, k_max: int = 30,
+               base_alpha: float = 0.2, prefetch: int = 0):
+    from repro.core import compression as C
+    from repro.core.simulator import (AFLSimulator, make_heterogeneous_devices,
+                                      plan_devices)
+    import jax
+    import numpy as np
+
+    params = task.init_fn(jax.random.PRNGKey(seed))
+    flat, _ = C.flatten_pytree(params)
+    model_bits = int(np.asarray(flat).size) * 32
+    profiles = make_heterogeneous_devices(num_devices, model_bits,
+                                          base_alpha=base_alpha, seed=seed)
+    specs = plan_devices(profiles, "fedluck", 1.0, k_bounds=(1, k_max),
+                         error_feedback=error_feedback, k_grid=K_GRID)
+    return AFLSimulator(task, specs, "periodic", round_period=1.0,
+                        seed=seed, engine=engine, prefetch=prefetch)
+
+
+def measure(engine: str, num_devices: int, rounds: int, *, task,
+            error_feedback: bool = False, k_max: int = 30,
+            base_alpha: float = 0.2, warmup_rounds: int = 5,
+            prefetch: int = 0) -> dict:
+    sim = _build_sim(engine, num_devices, task=task,
+                     error_feedback=error_feedback, k_max=k_max,
+                     base_alpha=base_alpha, prefetch=prefetch)
+    t0 = time.perf_counter()
+    sim.run(total_rounds=warmup_rounds, eval_every=0)
+    warm = time.perf_counter() - t0
+    ev0 = sim.events_processed
+    t0 = time.perf_counter()
+    hist = sim.run(total_rounds=warmup_rounds + rounds, eval_every=0)
+    wall = time.perf_counter() - t0
+    sim.close()
+    events = sim.events_processed - ev0
+    sim_time = hist.records[-1].time
+    return {
+        "engine": engine,
+        "devices": num_devices,
+        "rounds": rounds,
+        "error_feedback": error_feedback,
+        "warm_s": round(warm, 3),
+        "wall_s": round(wall, 3),
+        "events": events,
+        "events_per_sec": round(events / wall, 2),
+        "wall_per_sim_sec": round(wall / sim_time, 4) if sim_time else None,
+        "sim_time_s": round(float(sim_time), 3),
+        "final_acc": round(hist.final_accuracy(), 4),
+    }
+
+
+def _pair(num_devices: int, rounds: int, *, task, ef: bool = False,
+          k_max: int = 30, base_alpha: float = 0.2, warmup_rounds: int = 5,
+          prefetch: int = 0, skip_sequential: bool = False) -> dict:
+    out = {"devices": num_devices, "rounds": rounds, "error_feedback": ef,
+           "task": task.name}
+    for eng in ("batched",) if skip_sequential else ("batched", "sequential"):
+        print(f"[sim_bench] task={task.name} devices={num_devices} "
+              f"rounds={rounds} ef={ef} {eng} ...", flush=True)
+        out[eng] = measure(eng, num_devices, rounds, task=task,
+                           error_feedback=ef, k_max=k_max,
+                           base_alpha=base_alpha, warmup_rounds=warmup_rounds,
+                           prefetch=prefetch)
+    if not skip_sequential:
+        out["speedup_wall"] = round(
+            out["sequential"]["wall_s"] / out["batched"]["wall_s"], 2)
+    return out
+
+
+def run_bench(smoke: bool = False, seed: int = 0) -> dict:
+    from repro.models.small import make_task
+
+    micro = make_task("mlp_micro", num_samples=2000, test_samples=200,
+                      batch_size=32, seed=seed)
+    report = {"bench": "simulator_events_per_sec",
+              "strategy": "periodic (FedLuck plans)", "backend": "cpu",
+              "unit": "simulated events/sec; wall seconds per sim second",
+              "methodology": "steady-state: jit warmup excluded (warm_s)"}
+    if smoke:
+        report["mode"] = "smoke"
+        report["headline"] = _pair(4, 3, task=micro, warmup_rounds=2)
+        report["fleets"] = [report["headline"]]
+        return report
+
+    report["mode"] = "full"
+    # acceptance headline: 100-device / 50-round periodic-FedLuck run on the
+    # engine-throughput (compute-light) configuration
+    report["headline"] = _pair(100, 50, task=micro)
+    fleets = [_pair(10, 20, task=micro), _pair(50, 20, task=micro),
+              _pair(200, 20, task=micro)]
+    # EF exercises the device-resident stacked-residual path
+    fleets.append(_pair(50, 10, task=micro, ef=True))
+    # prefetch row: background stacking thread (pays off with spare cores)
+    fleets.append(_pair(50, 10, task=micro, prefetch=1))
+    # compute-bound regime: both engines pay identical local-round FLOPs on
+    # one core, so the gap narrows to the eliminated dispatch/sort overhead
+    fmnist = make_task("mlp_fmnist", num_samples=2000, test_samples=200,
+                       batch_size=32, seed=seed)
+    fleets.append(_pair(20, 10, task=fmnist, warmup_rounds=3))
+    report["fleets"] = fleets
+    return report
+
+
+def smoke_rows():
+    """CSV rows for benchmarks.run integration: name,us_per_call,derived."""
+    rep = run_bench(smoke=True)
+    rows = []
+    for eng in ("batched", "sequential"):
+        r = rep["headline"][eng]
+        us_per_event = 1e6 * r["wall_s"] / max(1, r["events"])
+        rows.append((f"sim_{eng}_d{r['devices']}", us_per_event,
+                     f"{r['events_per_sec']}ev/s"))
+    rows.append(("sim_speedup", 0.0, f"{rep['headline']['speedup_wall']}x"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fleet / few rounds (CI smoke job)")
+    ap.add_argument("--out", default="",
+                    help="write the JSON report here (default: stdout only)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    report = run_bench(smoke=args.smoke, seed=args.seed)
+    text = json.dumps(report, indent=1)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"[sim_bench] wrote {args.out}")
+
+    # sanity gate so the CI smoke job fails loudly on a broken engine
+    head = report["headline"]
+    ok = (head["batched"]["events"] > 0
+          and head["batched"]["events"] == head["sequential"]["events"]
+          and abs(head["batched"]["final_acc"]
+                  - head["sequential"]["final_acc"]) < 1e-6)
+    if not ok:
+        print("[sim_bench] FAIL: engines disagree", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,15 +18,45 @@ model now". Strategies mutate `GlobalModel` in place.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, NamedTuple, Union
 
 import numpy as np
+
+
+class SparseUpdate(NamedTuple):
+    """Compact (values, indices) wire payload of a sparse pseudo-gradient.
+
+    The batched simulator engine pulls arrivals off-device in this form
+    (k values + k int32 indices) instead of a dense d-length vector. Zero
+    values are permitted (padding slots); indices must be unique so that
+    scatter-add equals dense addition bitwise.
+    """
+    values: np.ndarray
+    indices: np.ndarray
+    dim: int
+
+    def dense(self) -> np.ndarray:
+        out = np.zeros((self.dim,), np.float32)
+        np.add.at(out, self.indices, self.values)
+        return out
+
+
+Update = Union[np.ndarray, SparseUpdate]
+
+
+def add_update(acc: np.ndarray, u: Update) -> None:
+    """acc += u, scatter-adding sparse payloads (bitwise equal to the dense
+    path: adding an explicit 0.0 never changes a float)."""
+    if isinstance(u, SparseUpdate):
+        np.add.at(acc, u.indices, u.values)
+    else:
+        acc += u
 
 
 @dataclasses.dataclass
 class Arrival:
     device_id: int
-    update: np.ndarray       # dense reconstruction of compressed pseudo-grad
+    update: Update           # dense (or compact sparse) compressed pseudo-grad
     model_round: int         # round tag the update was computed from
     wire_bits: float
     arrive_time: float
@@ -48,12 +78,12 @@ class GlobalModel:
         self.eta_g = float(eta_g)
         self.round = 0
 
-    def apply_mean(self, updates: list[np.ndarray], scale: float | None = None):
+    def apply_mean(self, updates: list[Update], scale: float | None = None):
         """Eq. 6:  w ← w − η_g/|S| Σ g̃."""
         s = self.eta_g / len(updates) if scale is None else scale
         acc = np.zeros_like(self.w)
         for u in updates:
-            acc += u
+            add_update(acc, u)
         self.w -= s * acc
         self.round += 1
 
@@ -141,7 +171,11 @@ class AsyncAggregator(_Base):
         tau = self._tau(a)
         self.staleness_log.append(tau)
         weight = self.mix_eta * (1.0 + tau) ** (-self.poly_a)
-        self.model.w -= self.model.eta_g * weight * a.update
+        if isinstance(a.update, SparseUpdate):
+            np.subtract.at(self.model.w, a.update.indices,
+                           (self.model.eta_g * weight) * a.update.values)
+        else:
+            self.model.w -= self.model.eta_g * weight * a.update
         self.model.round += 1
         return [AggregationEvent(t_now, self.model.round, [a.device_id],
                                  {a.device_id: tau})]

@@ -72,6 +72,25 @@ def topk(g: jax.Array, rate: float) -> Compressed:
     return Compressed(vals, idx.astype(jnp.int32), d, bits)
 
 
+def topk_capped(g: jax.Array, k: jax.Array, *, k_cap: int) -> Compressed:
+    """Top-k with a *traced* per-call k bounded by the static `k_cap`.
+
+    Built for `jax.vmap` over a bucket of devices whose δ_i (and hence
+    k_i = δ_i·d) differ: the payload always has `k_cap` slots, with entries
+    beyond k zero-valued (their indices are real top-|g| coordinates, but
+    scatter-adding a 0 is a no-op, so `dense()` reconstructs exactly the
+    top-k selection). Because `lax.top_k` sorts descending with
+    index-order tie-breaks, the first k of the top-k_cap equal the exact
+    top-k — bitwise identical to `topk(g, k/d)`.
+    """
+    d = g.shape[0]
+    _, idx = jax.lax.top_k(jnp.abs(g), k_cap)
+    keep = jnp.arange(k_cap) < k
+    vals = jnp.where(keep, g[idx], 0.0)
+    bits = jnp.asarray(k, jnp.float32) * (32.0 + 32.0)
+    return Compressed(vals, idx.astype(jnp.int32), d, bits)
+
+
 def randk(g: jax.Array, rate: float, key: jax.Array) -> Compressed:
     d = g.shape[0]
     k = num_keep(d, rate)
@@ -114,41 +133,42 @@ def identity(g: jax.Array) -> Compressed:
 
 
 # -------------------------------------------------------- threshold top-k (TPU)
-def topk_threshold(g: jax.Array, rate: float, *, buckets: int = 64,
-                   refine_iters: int = 12,
+def _bracket_threshold(counts_ge: jax.Array, edges: jax.Array, k) -> tuple:
+    """(lo, hi) bracket: largest edge with count >= k and the edge above it.
+    Mirrors `kernels.ops._solve_threshold` (edges descending)."""
+    reached = counts_ge >= k
+    sel = jnp.argmax(reached)
+    sel = jnp.where(jnp.any(reached), sel, edges.shape[0] - 1)
+    return edges[sel], edges[jnp.maximum(sel - 1, 0)]
+
+
+def topk_threshold(g: jax.Array, rate: float, *, coarse_buckets: int = 48,
+                   fine_buckets: int = 128,
                    exact_k: bool | None = None) -> Compressed:
     """TPU-native top-k: log-magnitude histogram → threshold → mask.
 
     Pure-jnp reference of the Pallas `magnitude_hist` + `ef_topk` pipeline
-    (see repro/kernels). Selection matches exact top-k up to ties at the
-    threshold; nnz is capped to k exactly by a final count-based correction.
-    Returns a *dense masked* payload (indices=None) — the wire cost is still
-    accounted sparse (k values + k indices), matching how the compacted form
-    would ship.
+    (see repro/kernels), parameter-compatible with `kernels.ops.topk_compress`
+    (same coarse log2 pass + fine linear pass and the same defaults).
+    Selection matches exact top-k up to ties at the threshold; nnz is capped
+    to k exactly by a final count-based correction. Returns a *dense masked*
+    payload (indices=None) — the wire cost is still accounted sparse
+    (k values + k indices), matching how the compacted form would ship.
     """
     d = g.shape[0]
     k = num_keep(d, rate)
     mag = jnp.abs(g)
     gmax = jnp.max(mag) + 1e-30
-    # histogram over log2 magnitude relative to max
-    lo = gmax * 2.0 ** (-buckets)  # dynamic range of 2^-buckets
-    edges = gmax * 2.0 ** (-jnp.arange(buckets + 1, dtype=jnp.float32))  # desc
-    counts_ge = jnp.sum(mag[None, :] >= edges[:, None], axis=1)  # [buckets+1]
-    # smallest threshold with count >= k  (edges descending)
-    sel = jnp.argmax(counts_ge >= k)  # first index where true
-    hi_t = edges[jnp.maximum(sel - 1, 0)]
-    lo_t = edges[sel]
-    # bisection refine in [lo_t, hi_t] to hit count == k as close as possible
-
-    def body(_, carry):
-        lo_c, hi_c = carry
-        mid = 0.5 * (lo_c + hi_c)
-        cnt = jnp.sum(mag >= mid)
-        lo_c, hi_c = jnp.where(cnt > k, mid, lo_c), jnp.where(cnt > k, hi_c, mid)
-        return lo_c, hi_c
-
-    lo_t, hi_t = jax.lax.fori_loop(0, refine_iters, body, (lo_t, hi_t))
-    t = hi_t
+    # pass 1: coarse histogram over log2 magnitude relative to max
+    coarse_edges = gmax * 2.0 ** (-jnp.arange(coarse_buckets + 1,
+                                              dtype=jnp.float32))  # descending
+    c_counts = jnp.sum(mag[None, :] >= coarse_edges[:, None], axis=1)
+    lo_t, hi_t = _bracket_threshold(c_counts, coarse_edges, k)
+    # pass 2: fine linear histogram inside [lo_t, hi_t]
+    frac = jnp.arange(fine_buckets + 1, dtype=jnp.float32) / fine_buckets
+    fine_edges = jnp.maximum(hi_t - (hi_t - lo_t) * frac, 1e-30)  # descending
+    f_counts = jnp.sum(mag[None, :] >= fine_edges[:, None], axis=1)
+    _, t = _bracket_threshold(f_counts, fine_edges, k)
     mask = mag >= t
     # exact-k correction: if count > k, drop smallest of the selected (ties).
     # Skipped for d beyond int32 (lax.top_k index limit) — there the bisection

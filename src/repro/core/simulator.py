@@ -7,6 +7,32 @@ clock at  t + k_i·α_i + rate_i·β_i  (Eq. 5). The server strategy decides
 when aggregation happens (periodic / buffered / async / sync) and the
 simulator hands fresh global models back to devices.
 
+Two execution engines share the same event semantics:
+
+  engine="batched" (default) — the device-resident hot path. Pending device
+  cycles that cannot be affected by any intervening aggregation event are
+  drained from the event heap together, grouped into plan-time buckets
+  (same local-k / compressor family / error-feedback), split into exact
+  power-of-two chunks, and dispatched through one `jax.vmap`-ed
+  local-round + compress function per chunk (dispatch-then-collect, so
+  host-side stacking overlaps asynchronous XLA compute). EF residuals live in a single stacked
+  [num_devices, d] device array updated with `.at[rows]` scatters
+  (`donate_argnums` on the residual stack lets XLA scatter in place; the
+  flat model is a fresh per-dispatch upload with no aliasable output, so
+  donating it would be a no-op), and sparse compressors ship arrivals as compact
+  (values, indices) pairs instead of dense d-length vectors. Per-device
+  batches come from `data.pipeline.StackedLoader`s; `prefetch=0` (the
+  default) stacks synchronously — background prefetch threads only pay off
+  when spare cores exist, so raise `prefetch` on multi-core hosts. Within a
+  bucket, mixed δ_i are handled by `compression.topk_capped` (traced
+  per-row k under a static cap), so results stay *bitwise identical* to the
+  sequential engine (tested in test_simulator_batched.py).
+
+  engine="sequential" — the pre-batching reference path: one Python cycle,
+  one jit dispatch, and one dense host pull per arrival, with EF residuals
+  in a host-side per-device dict. Kept as the equivalence/benchmark
+  baseline (`benchmarks/sim_bench.py` measures batched speedup against it).
+
 Communication accounting follows the paper: transmitted data ∝ δ
 (bits = rate·d·32, time = rate·β). Strict values/indices accounting is
 available via `count_index_bits=True`.
@@ -14,7 +40,9 @@ available via `count_index_bits=True`.
 Fault tolerance hooks: a `FailureSchedule` (repro.ft) injects device
 crashes — an in-flight upload inside a failure window is lost, and the
 device re-registers at recovery (elastic membership; the FedLuck controller
-re-plans). Stragglers are devices whose α drifts mid-run.
+re-plans). Stragglers are devices whose α drifts mid-run. Failure-injected
+runs always use the sequential path: crash/recovery interleaving is
+inherently per-device.
 """
 from __future__ import annotations
 
@@ -30,7 +58,9 @@ import numpy as np
 
 from repro.core import compression as C
 from repro.core.aggregation import (Arrival, GlobalModel, PeriodicAggregator,
-                                    SyncAggregator, make_aggregator)
+                                    SparseUpdate, SyncAggregator,
+                                    make_aggregator)
+from repro.core import factor
 from repro.core.controller import DeviceProfile, FedLuckController
 from repro.core.factor import Plan
 
@@ -55,6 +85,7 @@ class DeviceSpec:
     plan: Plan
     compressor: str = "topk"      # topk | randk | qsgd | signsgd | none
     error_feedback: bool = False
+    compressor_kwargs: dict = dataclasses.field(default_factory=dict)
 
     @property
     def rate(self) -> float:
@@ -62,10 +93,15 @@ class DeviceSpec:
         if self.compressor in ("topk", "topk_threshold", "randk"):
             return self.plan.delta
         if self.compressor == "qsgd":
-            return 9.0 / 32.0
+            # (log2(levels) + sign) bits per coordinate over fp32
+            levels = int(self.compressor_kwargs.get("levels", 256))
+            return (math.log2(levels) + 1.0) / 32.0
         if self.compressor == "signsgd":
             return 1.0 / 32.0
         return 1.0
+
+    def _ckw_key(self) -> tuple:
+        return tuple(sorted(self.compressor_kwargs.items()))
 
 
 @dataclasses.dataclass
@@ -100,6 +136,31 @@ class History:
         return float(np.mean([r.accuracy for r in self.records[-window:]]))
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+# Largest vmap chunk a bucket dispatches at once. Chunks are exact binary
+# decompositions of the bucket occupancy (10 -> 8+2), so no lane is ever a
+# padded duplicate, and each bucket compiles at most log2(cap)+1 shape
+# variants over a whole run.
+_CHUNK_CAP = 16
+
+
+def _chunk_sizes(n: int, cap: int = _CHUNK_CAP) -> list[int]:
+    out, size = [], cap
+    while n:
+        while size > n:
+            size >>= 1
+        reps, n = divmod(n, size)
+        out.extend([size] * reps)
+    return out
+
+
+# Compressors whose payload carries explicit indices → compact wire pull.
+_SPARSE_WIRE = ("topk", "topk_threshold", "randk")
+
+
 # ------------------------------------------------------------------ simulator
 class AFLSimulator:
     def __init__(self, task: TrainTask, devices: list[DeviceSpec],
@@ -108,7 +169,10 @@ class AFLSimulator:
                  momentum: float = 0.9, seed: int = 0,
                  client_indices: list[np.ndarray] | None = None,
                  failure_schedule=None, count_index_bits: bool = False,
-                 strategy_kwargs: dict | None = None):
+                 strategy_kwargs: dict | None = None,
+                 engine: str = "batched", prefetch: int = 0):
+        if engine not in ("batched", "sequential"):
+            raise ValueError(f"unknown engine {engine}")
         self.task = task
         self.devices = {d.profile.device_id: d for d in devices}
         self.round_period = float(round_period)
@@ -117,6 +181,9 @@ class AFLSimulator:
         self.count_index_bits = count_index_bits
         self.strategy_name = strategy
         self.rng = np.random.RandomState(seed)
+        self.engine = engine
+        self._batched = engine == "batched" and failure_schedule is None
+        self.events_processed = 0
 
         # ---- params / flat spec
         params = task.init_fn(jax.random.PRNGKey(seed))
@@ -129,7 +196,7 @@ class AFLSimulator:
         self.agg = make_aggregator(strategy, self.model, **skw)
 
         # ---- per-client data
-        from repro.data.pipeline import DataLoader
+        from repro.data.pipeline import DataLoader, StackedLoader
         n = len(task.dataset)
         if client_indices is None:
             from repro.data.partition import iid_partition
@@ -139,12 +206,44 @@ class AFLSimulator:
                             seed=seed + 17 * did)
             for did, idx in zip(sorted(self.devices), client_indices)}
 
-        # ---- jitted compute, cached per static k / rate
-        self._round_fns: dict[int, Callable] = {}
+        # ---- device-id <-> residual-stack row mapping (row N is a spare
+        # scratch row, kept so the stack shape is stable if a future
+        # dispatch policy ever needs a sink lane)
+        self._dids = sorted(self.devices)
+        self._rowof = {did: i for i, did in enumerate(self._dids)}
+        self._scratch_row = len(self._dids)
+        self._has_ef = any(s.error_feedback for s in devices)
+
+        # ---- residual storage: stacked device array (batched) or host dict
+        # (sequential, the pre-change layout)
+        self._res_stack: jax.Array | None = None
+        self._residuals: dict[int, np.ndarray] = {}
+        if self._batched:
+            if self._has_ef:
+                self._res_stack = jnp.zeros(
+                    (len(self._dids) + 1, self.dim), jnp.float32)
+            self._stacked = {
+                did: StackedLoader(self.loaders[did],
+                                   self.devices[did].plan.k, prefetch)
+                for did in self._dids}
+            self._plan_buckets()
+        else:
+            self._residuals = {did: np.zeros((self.dim,), np.float32)
+                               for did in self._dids}
+            self._stacked = {}
+
+        # ---- jitted compute caches
+        self._seq_round = jax.jit(self._round_body())
         self._compress_fns: dict[tuple, Callable] = {}
-        self._residuals: dict[int, np.ndarray] = {
-            did: np.zeros((self.dim,), np.float32) for did in self.devices}
+        self._bucket_fns: dict[tuple, Callable] = {}
         self._eval_fn = jax.jit(self._make_eval())
+        self._stal_ptr = 0   # staleness_log watermark for per-eval windows
+
+    # --------------------------------------------------------------- teardown
+    def close(self) -> None:
+        """Stop prefetch threads (safe to call more than once)."""
+        for sl in self._stacked.values():
+            sl.close()
 
     # --------------------------------------------------------------- jit fns
     def _make_eval(self):
@@ -155,14 +254,13 @@ class AFLSimulator:
             return acc_fn(params, batch), loss_fn(params, batch)
         return ev
 
-    def _local_round_fn(self, k: int):
-        """flat params + stacked batches[k] -> pseudo-gradient g = w0 - wk."""
-        if k in self._round_fns:
-            return self._round_fns[k]
+    def _round_body(self):
+        """Pure fn: flat params + stacked batches[k] -> pseudo-gradient
+        g = w0 - wk (Eq. 4). Shared verbatim by the sequential jit and the
+        batched vmap so both engines are bitwise identical."""
         loss_fn, spec = self.task.loss_fn, self.spec
         eta_l, mom = self.eta_l, self.momentum
 
-        @jax.jit
         def run(flat, batches):
             params = C.unflatten_pytree(flat, spec)
             mu0 = jax.tree.map(jnp.zeros_like, params)
@@ -178,15 +276,15 @@ class AFLSimulator:
             f1, _ = C.flatten_pytree(p1)
             return flat - f1  # Eq. 4
 
-        self._round_fns[k] = run
         return run
 
     def _compressor_fn(self, spec_d: DeviceSpec):
-        key = (spec_d.compressor, round(spec_d.plan.delta, 6),
-               spec_d.error_feedback)
+        key = (spec_d.compressor, float(spec_d.plan.delta),
+               spec_d.error_feedback, spec_d._ckw_key())
         if key in self._compress_fns:
             return self._compress_fns[key]
-        comp = C.make_compressor(spec_d.compressor, spec_d.plan.delta)
+        comp = C.make_compressor(spec_d.compressor, spec_d.plan.delta,
+                                 **spec_d.compressor_kwargs)
 
         @jax.jit
         def run(g, residual, rngkey):
@@ -202,17 +300,222 @@ class AFLSimulator:
         self._compress_fns[key] = fn
         return fn
 
+    # -------------------------------------------------- batched bucket engine
+    def _bucket_key(self, s: DeviceSpec) -> tuple:
+        """Plan-time bucket id. `topk` buckets by local-k and a power-of-two
+        band over k_i = δ_i·d (mixed δ_i within a band ride in one vmap via
+        a traced per-row k, wasting at most 2× selection work); δ_i = 1
+        devices get a dedicated "full" band whose payload is the identity —
+        no top-k sort at all, unlike the sequential path which full-sorts d
+        elements per full-rate cycle. Other compressors need a static shape
+        per δ, so δ joins the key."""
+        if s.compressor == "topk":
+            keep = C.num_keep(self.dim, s.plan.delta)
+            band = "full" if keep >= self.dim else _next_pow2(keep)
+            return (s.plan.k, "topk", band, s.error_feedback, s._ckw_key())
+        return (s.plan.k, s.compressor, float(s.plan.delta),
+                s.error_feedback, s._ckw_key())
+
+    def _plan_buckets(self) -> None:
+        members: dict[tuple, list[int]] = {}
+        for did in self._dids:
+            members.setdefault(self._bucket_key(self.devices[did]),
+                               []).append(did)
+        self._bucket_kcap = {}
+        for bkey, dids in members.items():
+            if bkey[1] == "topk" and bkey[2] != "full":
+                self._bucket_kcap[bkey] = max(
+                    C.num_keep(self.dim, self.devices[d].plan.delta)
+                    for d in dids)
+
+    @staticmethod
+    def _bucket_sparse(bkey: tuple) -> bool:
+        """True when the bucket's payload is a (values, indices) pair.
+        The full-rate topk band ships dense: its payload IS the
+        pseudo-gradient, and an index vector would be a d-length iota."""
+        return bkey[1] in _SPARSE_WIRE and bkey[2] != "full"
+
+    def _bucket_fn(self, bkey: tuple, P: int):
+        """One jitted dispatch for a chunk of P same-bucket cycles."""
+        cache_key = (bkey, P)
+        if cache_key in self._bucket_fns:
+            return self._bucket_fns[cache_key]
+        _, name, delta, ef, ckw = bkey
+        dim = self.dim
+        local = self._round_body()
+        sparse = self._bucket_sparse(bkey)
+
+        if name == "topk" and delta == "full":
+            # δ_i = 1 devices: top-d of d is the identity permutation, so
+            # skip the O(d log d) sort the sequential path pays and ship the
+            # accumulator itself. Reconstruction is exact (scatter-add of
+            # every coordinate onto zeros == the vector, up to ±0.0 signs,
+            # which no downstream arithmetic can distinguish).
+            def compress(acc, key, krow):
+                bits = jnp.asarray(krow, jnp.float32) * 64.0
+                return acc, acc, bits
+        elif name == "topk":
+            kcap = self._bucket_kcap[bkey]
+
+            def compress(acc, key, krow):
+                cc = C.topk_capped(acc, krow, k_cap=kcap)
+                return (cc.values, cc.indices), cc.dense(), cc.wire_bits
+        elif name == "topk_threshold":
+            comp = C.make_compressor(name, delta, **dict(ckw))
+            kcap = C.num_keep(dim, delta)
+
+            def compress(acc, key, krow):
+                from repro.kernels import ops
+                cc = comp(acc, key)
+                dense = cc.dense()
+                vals, idx = ops.compact_topk(dense, kcap)
+                return (vals, idx), dense, cc.wire_bits
+        else:
+            comp = C.make_compressor(name, delta if delta is not None else 1.0,
+                                     **dict(ckw))
+
+            def compress(acc, key, krow):
+                cc = comp(acc, key)
+                dense = cc.dense()
+                payload = (cc.values, cc.indices) if sparse else dense
+                return payload, dense, cc.wire_bits
+
+        if ef:
+            def row(flat, res_row, batch, seed, krow):
+                g = local(flat, batch)
+                key = jax.random.PRNGKey(seed)
+                acc = g + res_row                   # ef_compress, inlined so
+                payload, dense, bits = compress(acc, key, krow)
+                return payload, acc - dense, bits   # residual stays on device
+
+            # Donate the [N+1, d] residual stack: it aliases the returned
+            # updated stack, so XLA scatters the B fresh rows in place
+            # instead of copying the whole fleet buffer per dispatch. The
+            # flat model is NOT donated — no output aliases its shape (the
+            # global model only changes server-side), so donation would be
+            # a dead no-op that XLA warns about. Batches are [k, P, ...]
+            # (vmap in_axes=1): the scan then slices contiguous [P, ...]
+            # per-step blocks, which benches faster than a [P, k, ...]
+            # layout whose scan slices are strided.
+            @partial(jax.jit, donate_argnums=(1,))
+            def bucket(flat, res_stack, rows, batches, seeds, krows):
+                res_rows = res_stack[rows]
+                payload, new_rows, bits = jax.vmap(
+                    row, in_axes=(None, 0, 1, 0, 0))(
+                        flat, res_rows, batches, seeds, krows)
+                return payload, res_stack.at[rows].set(new_rows), bits
+        else:
+            def row(flat, batch, seed, krow):
+                g = local(flat, batch)
+                key = jax.random.PRNGKey(seed)
+                payload, _, bits = compress(g, key, krow)
+                return payload, bits
+
+            @jax.jit
+            def bucket(flat, batches, seeds, krows):
+                return jax.vmap(row, in_axes=(None, 1, 0, 0))(
+                    flat, batches, seeds, krows)
+
+        self._bucket_fns[cache_key] = bucket
+        return bucket
+
+    def _cycle_span(self, did: int) -> float:
+        spec = self.devices[did]
+        return spec.plan.k * spec.profile.alpha + spec.rate * spec.profile.beta
+
+    def _process_starts_batched(self, starts: list, push) -> None:
+        """Run a drained batch of device cycles through bucketed vmap
+        dispatches. `starts` is [(t, (did, model_round))] in heap-pop order;
+        arrivals are pushed back in that same order so heap tie-breaking
+        (and the host RNG stream) match the sequential engine exactly.
+
+        Two phases: dispatch every chunk of every bucket first (jitted CPU
+        computations run asynchronously on XLA worker threads, so host-side
+        stacking of the next chunk overlaps device compute of the previous
+        one), then pull the payloads."""
+        order = []
+        for t, (did, mr) in starts:
+            stacked = self._stacked[did].next()
+            seed = self.rng.randint(0, 2 ** 31 - 1)
+            order.append((t, did, mr, stacked, seed))
+
+        buckets: dict[tuple, list] = {}
+        for item in order:
+            buckets.setdefault(self._bucket_key(self.devices[item[1]]),
+                               []).append(item)
+        # one host->device model upload per drain: the drain invariant is
+        # precisely that no aggregation lands inside it, so every chunk
+        # reads the same global model
+        flat = jnp.asarray(self.model.w)
+        pending = []
+        for bkey, items in buckets.items():
+            pos = 0
+            for size in _chunk_sizes(len(items)):
+                pending.append(self._dispatch_chunk(
+                    bkey, items[pos:pos + size], flat))
+                pos += size
+        results: dict[int, tuple] = {}
+        for rec in pending:
+            self._collect_chunk(rec, results)
+
+        for t, did, mr, _, _ in order:
+            update, bits = results[did]
+            finish = t + self._cycle_span(did)
+            push(finish, "arrival", Arrival(did, update, mr, bits, finish))
+
+    def _dispatch_chunk(self, bkey: tuple, items: list, flat):
+        """Launch one vmapped dispatch for an exact power-of-two chunk of
+        same-bucket cycles; returns the in-flight record for collection."""
+        B = len(items)
+        if B == 1:
+            # zero-copy: a [k, 1, ...] view of the loader stack
+            batches = {key: items[0][3][key][:, None] for key in items[0][3]}
+        else:
+            batches = {key: np.stack([it[3][key] for it in items], axis=1)
+                       for key in items[0][3]}
+        seeds = np.asarray([it[4] for it in items], np.uint32)
+        krows = np.asarray(
+            [C.num_keep(self.dim, self.devices[it[1]].plan.delta)
+             for it in items], np.int32)
+        fn = self._bucket_fn(bkey, B)
+        if bkey[3]:   # error feedback
+            rows = np.asarray([self._rowof[it[1]] for it in items], np.int32)
+            payload, self._res_stack, bits = fn(
+                flat, self._res_stack, rows, batches, seeds, krows)
+        else:
+            payload, bits = fn(flat, batches, seeds, krows)
+        return bkey, items, payload, bits
+
+    def _collect_chunk(self, rec, results: dict) -> None:
+        bkey, items, payload, bits = rec
+        payload, bits_host = jax.device_get((payload, bits))
+        if self._bucket_sparse(bkey):
+            vals, idxs = payload
+            for i, it in enumerate(items):
+                did = it[1]
+                results[did] = (SparseUpdate(vals[i], idxs[i], self.dim),
+                                self._wire_bits(did, bits_host[i]))
+        else:
+            dense = payload
+            for i, it in enumerate(items):
+                did = it[1]
+                results[did] = (dense[i], self._wire_bits(did, bits_host[i]))
+
+    def _wire_bits(self, did: int, strict_bits) -> float:
+        return (float(strict_bits) if self.count_index_bits
+                else self.devices[did].rate * self.dim * 32.0)
+
     # ----------------------------------------------------------- device cycle
     def _device_cycle(self, did: int, start_time: float, model_round: int,
                       flat_model: np.ndarray):
-        """Compute one local round; return the Arrival (or None if the device
-        fails mid-cycle per the failure schedule)."""
+        """Sequential engine: compute one local round; return the Arrival
+        (or None if the device fails mid-cycle per the failure schedule)."""
         spec = self.devices[did]
         k = spec.plan.k
         loader = self.loaders[did]
         batches = [loader.next() for _ in range(k)]
         stacked = {kk: np.stack([b[kk] for b in batches]) for kk in batches[0]}
-        g = self._local_round_fn(k)(jnp.asarray(flat_model), stacked)
+        g = self._seq_round(jnp.asarray(flat_model), stacked)
 
         rngkey = jax.random.PRNGKey(self.rng.randint(0, 2 ** 31 - 1))
         if spec.error_feedback:
@@ -222,15 +525,40 @@ class AFLSimulator:
         else:
             dense, strict_bits = self._compressor_fn(spec)(g, rngkey)
 
-        compute_t = k * spec.profile.alpha
-        tx_t = spec.rate * spec.profile.beta
-        finish = start_time + compute_t + tx_t
+        finish = start_time + self._cycle_span(did)
         if self.failure_schedule is not None and \
                 self.failure_schedule.lost_in_flight(did, start_time, finish):
             return None, self.failure_schedule.recovery_time(did, start_time)
-        bits = (float(strict_bits) if self.count_index_bits
-                else spec.rate * self.dim * 32.0)
+        bits = self._wire_bits(did, strict_bits)
         return Arrival(did, np.asarray(dense), model_round, bits, finish), None
+
+    # ------------------------------------------------------------- residual IO
+    def residual_snapshot(self) -> tuple[np.ndarray, np.ndarray]:
+        """(device_ids, stacked [N, d] residuals) — checkpoint payload."""
+        ids = np.asarray(self._dids, np.int64)
+        if self._batched:
+            if self._res_stack is None:
+                stack = np.zeros((len(self._dids), self.dim), np.float32)
+            else:
+                stack = np.asarray(self._res_stack[:len(self._dids)])
+        else:
+            stack = np.stack([self._residuals[d] for d in self._dids]) \
+                if self._dids else np.zeros((0, self.dim), np.float32)
+        return ids, stack
+
+    def load_residuals(self, ids: np.ndarray, stacked: np.ndarray) -> None:
+        """Restore per-device EF residuals from a checkpoint payload."""
+        if self._batched:
+            if self._res_stack is None:
+                self._res_stack = jnp.zeros(
+                    (len(self._dids) + 1, self.dim), jnp.float32)
+            rows = np.asarray([self._rowof[int(d)] for d in ids], np.int32)
+            self._res_stack = self._res_stack.at[rows].set(
+                np.asarray(stacked, np.float32))
+        else:
+            for i, did in enumerate(np.asarray(ids).tolist()):
+                self._residuals[int(did)] = \
+                    np.asarray(stacked[i], np.float32)
 
     # -------------------------------------------------------------------- run
     def run(self, total_rounds: int = 50, eval_every: int = 1,
@@ -262,8 +590,32 @@ class AFLSimulator:
             if t > max_sim_time or self.model.round >= total_rounds:
                 break
             last_t = t
+            self.events_processed += 1
 
             if kind == "start":
+                if self._batched:
+                    # Drain every start that must precede the earliest
+                    # possible completion of the drained set: no aggregation
+                    # (= model change) can land in between, so the whole
+                    # group reads the same global model and batches safely.
+                    # A device may appear only once per drain — buffered
+                    # strategies can release the same device several times
+                    # at one timestamp, and those cycles chain through its
+                    # EF residual, so they must run in separate drains.
+                    starts = [(t, payload)]
+                    seen = {payload[0]}
+                    horizon = t + self._cycle_span(payload[0])
+                    while heap and heap[0][2] == "start" and \
+                            heap[0][0] <= min(horizon, max_sim_time) and \
+                            heap[0][3][0] not in seen:
+                        t2, _, _, p2 = heapq.heappop(heap)
+                        starts.append((t2, p2))
+                        seen.add(p2[0])
+                        horizon = min(horizon, t2 + self._cycle_span(p2[0]))
+                        last_t = t2
+                        self.events_processed += 1
+                    self._process_starts_batched(starts, push)
+                    continue
                 did, mr = payload
                 if self.failure_schedule is not None and \
                         self.failure_schedule.is_down(did, t):
@@ -314,12 +666,15 @@ class AFLSimulator:
     def _eval(self, hist: History, t: float):
         acc, loss = self._eval_fn(jnp.asarray(self.model.w),
                                   self.task.test_batch)
-        stal = self.agg.staleness_log[-len(self.devices):]
+        # mean staleness over arrivals aggregated since the LAST eval: a
+        # fixed last-N slice would mix entries across aggregation rounds.
+        window = self.agg.staleness_log[self._stal_ptr:]
+        self._stal_ptr = len(self.agg.staleness_log)
         hist.records.append(Record(
             time=float(t), round=int(self.model.round),
             accuracy=float(acc), loss=float(loss),
             gbits=self.agg.total_bits / 1e9,
-            mean_staleness=float(np.mean(stal)) if stal else 0.0))
+            mean_staleness=float(np.mean(window)) if window else 0.0))
 
 
 # ------------------------------------------------------------ device builders
@@ -337,46 +692,82 @@ def make_heterogeneous_devices(
     return out
 
 
+def _snap_k(plan: Plan, p: DeviceProfile, round_period: float,
+            k_grid, k_bounds, delta_bounds,
+            fixed_delta: float | None = None) -> Plan:
+    """Snap a solver-chosen k to the nearest grid value and re-optimize δ
+    at the snapped k (or keep δ when it was fixed). Bounds the number of
+    distinct local-round shapes a fleet compiles — the batched engine jits
+    one vmapped cycle per (k, bucket) pair — at a tiny φ cost."""
+    lo, hi = int(k_bounds[0]), int(k_bounds[1])
+    cand = sorted({min(max(int(g), lo), hi) for g in k_grid})
+    k = min(cand, key=lambda g: (abs(g - plan.k), g))
+    if k == plan.k:
+        return plan
+    if fixed_delta is not None:
+        rt = k * p.alpha + fixed_delta * p.beta
+        return Plan(k, float(fixed_delta),
+                    float(factor.phi(k, fixed_delta, p.alpha, p.beta,
+                                     round_period)),
+                    rt, int(math.ceil(rt / round_period)))
+    return factor.solve_plan_fixed_k(p.alpha, p.beta, round_period, k,
+                                     delta_bounds=delta_bounds)
+
+
 def plan_devices(profiles: list[DeviceProfile], method: str,
                  round_period: float, *, k_bounds=(1, 60),
                  delta_bounds=(1e-3, 1.0), fixed_k: int = 10,
                  fixed_delta: float = 0.1,
                  compressor_override: str | None = None,
-                 error_feedback: bool = False) -> list[DeviceSpec]:
-    """Build DeviceSpecs for one of the 5 methods of the paper's Sec 4."""
+                 error_feedback: bool = False,
+                 compressor_kwargs: dict | None = None,
+                 k_grid: list[int] | None = None) -> list[DeviceSpec]:
+    """Build DeviceSpecs for one of the 5 methods of the paper's Sec 4.
+
+    `k_grid` (optional, methods that optimize k): snap each plan's k to the
+    nearest grid value and re-solve δ at that k — see `_snap_k`.
+    """
     method = method.lower()
+    ckw = dict(compressor_kwargs or {})
     specs = []
     if method == "fedluck":
         ctl = FedLuckController(round_period, k_bounds, delta_bounds)
         for p in profiles:
             plan = ctl.register(p)
+            if k_grid:
+                plan = _snap_k(plan, p, round_period, k_grid, k_bounds,
+                               delta_bounds)
             specs.append(DeviceSpec(p, plan, compressor_override or "topk",
-                                    error_feedback))
+                                    error_feedback, ckw))
     elif method == "opt_cr":   # fixed k, optimize δ (Tab. 2)
         ctl = FedLuckController(round_period, k_bounds, delta_bounds,
                                 mode="fixed_k", fixed_k=fixed_k)
         for p in profiles:
             specs.append(DeviceSpec(p, ctl.register(p),
                                     compressor_override or "topk",
-                                    error_feedback))
+                                    error_feedback, ckw))
     elif method == "opt_lf":   # fixed δ, optimize k (Tab. 2)
         ctl = FedLuckController(round_period, k_bounds, delta_bounds,
                                 mode="fixed_delta", fixed_delta=fixed_delta)
         for p in profiles:
-            specs.append(DeviceSpec(p, ctl.register(p),
+            plan = ctl.register(p)
+            if k_grid:
+                plan = _snap_k(plan, p, round_period, k_grid, k_bounds,
+                               delta_bounds, fixed_delta=fixed_delta)
+            specs.append(DeviceSpec(p, plan,
                                     compressor_override or "topk",
-                                    error_feedback))
+                                    error_feedback, ckw))
     elif method in ("fedper", "fedavg_topk"):
         for p in profiles:
             plan = Plan(fixed_k, fixed_delta, 0.0,
                         fixed_k * p.alpha + fixed_delta * p.beta, 0)
             specs.append(DeviceSpec(p, plan, compressor_override or "topk",
-                                    error_feedback))
+                                    error_feedback, ckw))
     elif method in ("fedbuff", "fedasync"):   # no compression baselines
         for p in profiles:
             plan = Plan(fixed_k, 1.0, 0.0, fixed_k * p.alpha + p.beta, 0)
             specs.append(DeviceSpec(p, plan, compressor_override or "none",
-                                    error_feedback))
+                                    error_feedback, ckw))
     else:
         raise ValueError(f"unknown method {method}")
     return specs

@@ -1,6 +1,9 @@
-"""Batching pipeline: per-client infinite loaders + mesh-sharded host batches."""
+"""Batching pipeline: per-client infinite loaders, stacked-batch prefetch,
+and mesh-sharded host batches."""
 from __future__ import annotations
 
+import queue
+import threading
 from typing import Iterator
 
 import numpy as np
@@ -27,6 +30,63 @@ class DataLoader:
         idx = self._order[self._pos:self._pos + self.batch_size]
         self._pos += self.batch_size
         return self.ds.batch(idx)
+
+    def __iter__(self) -> Iterator[dict]:
+        while True:
+            yield self.next()
+
+
+class StackedLoader:
+    """Stacked-batch iterator over a `DataLoader` for k-step local rounds.
+
+    Each `next()` groups `k` consecutive loader batches into one host batch
+    of shape [k, B, ...] — the layout `lax.scan`-based local rounds consume.
+    With `prefetch > 0` the next stacked batch is prepared ahead on a
+    background thread, overlapping host-side batching with device compute.
+    The batch *sequence* is identical to calling `loader.next()` k times per
+    round (single producer, same RNG order), so prefetching never changes
+    the data a run sees.
+    """
+
+    def __init__(self, loader: DataLoader, k: int, prefetch: int = 1):
+        self.loader = loader
+        self.k = int(k)
+        self._depth = int(prefetch)
+        self._q: queue.Queue | None = None
+        self._thread: threading.Thread | None = None
+        self._stop = False
+
+    def _draw(self) -> dict:
+        batches = [self.loader.next() for _ in range(self.k)]
+        return {kk: np.stack([b[kk] for b in batches]) for kk in batches[0]}
+
+    def _worker(self) -> None:
+        while not self._stop:
+            item = self._draw()
+            while not self._stop:
+                try:
+                    self._q.put(item, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    def next(self) -> dict:
+        if self._depth <= 0:
+            return self._draw()
+        if self._thread is None:
+            self._q = queue.Queue(maxsize=self._depth)
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+        return self._q.get()
+
+    def close(self) -> None:
+        """Stop the prefetch thread (safe to call more than once)."""
+        self._stop = True
+        if self._q is not None:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                pass
 
     def __iter__(self) -> Iterator[dict]:
         while True:

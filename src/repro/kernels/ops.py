@@ -78,6 +78,46 @@ def topk_compress(g: jax.Array, residual: jax.Array, *, rate: float,
     return out, new_res, nnz, t
 
 
+def compact_topk(dense: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Compact a dense masked vector to the (values, indices) wire format.
+
+    Picks the `k` largest-|.| coordinates of `dense`; when nnz(dense) <= k
+    the extra slots carry zero values (scatter-adding them is a no-op), so
+    `zeros(d).at[indices].add(values)` reconstructs `dense` exactly. This is
+    the compact pair the simulator ships off-device instead of a d-length
+    vector, and the wire format the ROADMAP pod-sync item calls for.
+    jit-safe and vmap-safe (k static).
+    """
+    _, idx = jax.lax.top_k(jnp.abs(dense), k)
+    return dense[idx], idx.astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("rate", "coarse_buckets", "fine_buckets",
+                                    "block", "interpret", "slack"))
+def topk_compress_sparse(g: jax.Array, residual: jax.Array, *, rate: float,
+                         coarse_buckets: int = 48, fine_buckets: int = 128,
+                         block: int = 8 * 1024, interpret: bool | None = None,
+                         slack: float = 1.05):
+    """`topk_compress` returning the compact (values, indices) wire pair.
+
+    Returns (values, indices, new_residual, nnz, threshold) with
+    len(values) == ceil(slack·k)+8: the histogram threshold can overshoot k
+    by ties within one fine bucket, so the capacity carries a small slack.
+    Callers can check `nnz` against the capacity; coordinates beyond it
+    (never observed at the tested rates) would be dropped from the wire but
+    remain accounted in `new_residual` only via the dense pipeline output.
+    """
+    out, new_res, nnz, t = topk_compress(
+        g, residual, rate=rate, coarse_buckets=coarse_buckets,
+        fine_buckets=fine_buckets, block=block, interpret=interpret)
+    d = g.shape[0]
+    k = max(1, min(d, int(round(rate * d))))
+    k_cap = min(d, int(k * slack) + 8)
+    vals, idx = compact_topk(out, k_cap)
+    return vals, idx, new_res, nnz, t
+
+
 @functools.partial(jax.jit,
                    static_argnames=("lr", "momentum", "block", "interpret"))
 def momentum_update(w: jax.Array, mu: jax.Array, g: jax.Array, *, lr: float,

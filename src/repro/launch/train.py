@@ -37,14 +37,14 @@ def fl_ckpt_state(sim) -> dict:
     """FL checkpoint payload: global model + round + per-device EF
     residuals (without the residuals, a resumed error-feedback run silently
     re-drops every deferred coordinate and diverges from the uninterrupted
-    run)."""
+    run). Residuals come via `residual_snapshot`, which works for both the
+    batched (device-resident stack) and sequential (host dict) engines."""
     state = {"w": np.asarray(sim.model.w),
              "round": np.asarray(sim.model.round)}
-    if sim._residuals:
-        dids = sorted(sim._residuals)
-        state["residual_ids"] = np.asarray(dids, np.int64)
-        state["residuals"] = np.stack(
-            [sim._residuals[d] for d in dids])
+    ids, stacked = sim.residual_snapshot()
+    if len(ids):
+        state["residual_ids"] = ids
+        state["residuals"] = stacked
     return state
 
 
@@ -52,10 +52,8 @@ def restore_fl_state(sim, state) -> None:
     sim.model.w = np.asarray(state["w"])
     sim.model.round = int(state["round"])
     if "residuals" in state:
-        res = np.asarray(state["residuals"])
-        dids = np.asarray(state["residual_ids"]).tolist()
-        for i, did in enumerate(dids):
-            sim._residuals[int(did)] = res[i].astype(np.float32)
+        sim.load_residuals(np.asarray(state["residual_ids"]),
+                           np.asarray(state["residuals"]))
 
 
 def run_fl(args) -> dict:

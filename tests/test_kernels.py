@@ -84,6 +84,34 @@ class TestTopkCompressPipeline:
             assert kept.min() >= dropped.max() - 1e-5 or \
                 kept.min() >= float(t) - 1e-7
 
+    @pytest.mark.parametrize("nnz", [0, 7, 64])
+    def test_compact_topk_round_trip(self, nnz):
+        """scatter(values, indices) reconstructs the dense masked vector
+        exactly whenever the capacity covers the support."""
+        d, cap = 5000, 64
+        rng = np.random.RandomState(nnz)
+        dense = np.zeros(d, np.float32)
+        support = rng.choice(d, size=nnz, replace=False)
+        dense[support] = rng.randn(nnz).astype(np.float32)
+        vals, idx = ops.compact_topk(jnp.asarray(dense), cap)
+        assert vals.shape == idx.shape == (cap,)
+        rebuilt = np.zeros(d, np.float32)
+        np.add.at(rebuilt, np.asarray(idx), np.asarray(vals))
+        np.testing.assert_array_equal(rebuilt, dense)
+
+    def test_compact_topk_sparse_pipeline_round_trip(self):
+        """topk_compress_sparse wire pair rebuilds the dense pipeline
+        output bit-for-bit at the tested rate."""
+        d = 40_000
+        g, res = _g(d, 21), _g(d, 22) * 0.1
+        dense, _, _, _ = ops.topk_compress(g, res, rate=0.01, interpret=True)
+        vals, idx, _, nnz, _ = ops.topk_compress_sparse(g, res, rate=0.01,
+                                                        interpret=True)
+        assert float(nnz) <= vals.shape[0]
+        rebuilt = np.zeros(d, np.float32)
+        np.add.at(rebuilt, np.asarray(idx), np.asarray(vals))
+        np.testing.assert_array_equal(rebuilt, np.asarray(dense))
+
     def test_statistics_use_ef_accumulator(self):
         """Threshold must be computed on g+residual, not g alone."""
         d = 10_000
