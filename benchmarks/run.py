@@ -15,6 +15,7 @@ def main() -> None:
                                          tab2_joint_vs_single)
     from benchmarks.kernel_bench import kernel_microbench, sync_crossover
     from benchmarks.sim_bench import smoke_rows as sim_smoke_rows
+    from benchmarks.chaos_bench import smoke_rows as chaos_smoke_rows
 
     benches = {
         "fig1": fig1_motivation_grid,
@@ -25,6 +26,7 @@ def main() -> None:
         "kernels": kernel_microbench,
         "sync": sync_crossover,
         "sim": sim_smoke_rows,
+        "chaos": chaos_smoke_rows,
     }
     picks = sys.argv[1:] or list(benches)
     print("name,us_per_call,derived")

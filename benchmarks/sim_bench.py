@@ -86,6 +86,9 @@ def measure(engine: str, num_devices: int, rounds: int, *, task,
         "wall_per_sim_sec": round(wall / sim_time, 4) if sim_time else None,
         "sim_time_s": round(float(sim_time), 3),
         "final_acc": round(hist.final_accuracy(), 4),
+        # resilience telemetry (zero on clean fleets): crash/channel drops,
+        # retry counts, sanitizer rejections — see AFLSimulator.fault_counters
+        "counters": sim.fault_counters(),
     }
 
 

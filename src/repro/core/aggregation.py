@@ -14,6 +14,15 @@ model now". Strategies mutate `GlobalModel` in place.
   BufferedAggregator  — FedBuff (aggregate every K arrivals)
   AsyncAggregator     — FedAsync (apply immediately, staleness-weighted)
   SyncAggregator      — FedAvg(+TopK) (barrier over all devices)
+
+Every strategy optionally runs arrivals through an `UpdateSanitizer`
+before admitting them (attach one via `_Base.sanitizer`): non-finite
+payloads are rejected outright, over-norm updates are clipped, and
+zombie updates past a staleness cap τ_max are dropped or down-weighted.
+Wire bits are charged *before* sanitization — a rejected upload still
+spent its bandwidth. Rejected devices are still released (a dropped
+update must not deadlock its sender), and per-category drop counters
+accumulate on the sanitizer for `History` surfacing.
 """
 from __future__ import annotations
 
@@ -88,15 +97,89 @@ class GlobalModel:
         self.round += 1
 
 
+# ----------------------------------------------------------------- sanitizer
+@dataclasses.dataclass
+class SanitizerConfig:
+    """Knobs for `UpdateSanitizer`.
+
+    nonfinite_guard — reject updates containing NaN/Inf (corrupted wire
+        payloads, diverged local training).
+    clip_norm — L2 outlier guard: updates with ‖u‖₂ > clip_norm are
+        rescaled to that norm (None disables). Note the norm is taken
+        over the payload's stored values, so a sparse (values, indices)
+        payload and its dense form can differ in the last float bit —
+        keep clipping out of bitwise engine-equivalence comparisons.
+    tau_max — staleness cap: arrivals with τ > tau_max are dropped
+        (`stale_mode="drop"`) or scaled by 1/(1 + τ − τ_max)
+        (`stale_mode="downweight"`). None disables.
+    """
+    nonfinite_guard: bool = True
+    clip_norm: float | None = None
+    tau_max: int | None = None
+    stale_mode: str = "drop"          # drop | downweight
+
+
+def _scaled(a: Arrival, w: float) -> Arrival:
+    u = a.update
+    if isinstance(u, SparseUpdate):
+        u = SparseUpdate(u.values * np.float32(w), u.indices, u.dim)
+    else:
+        u = u * np.float32(w)
+    return dataclasses.replace(a, update=u)
+
+
+class UpdateSanitizer:
+    """Admission control for arrivals; counts what it rejects/reshapes."""
+
+    def __init__(self, cfg: SanitizerConfig | None = None):
+        self.cfg = cfg or SanitizerConfig()
+        # sanitized_dropped counts outright rejections (a clipped or
+        # down-weighted update is modified, not dropped)
+        self.counts = {"sanitized_nonfinite": 0, "sanitized_stale": 0,
+                       "sanitized_clipped": 0, "sanitized_dropped": 0}
+
+    def admit(self, tau: int, a: Arrival) -> Arrival | None:
+        """Admitted (possibly rescaled) arrival, or None when dropped."""
+        cfg = self.cfg
+        vals = a.update.values if isinstance(a.update, SparseUpdate) \
+            else a.update
+        if cfg.nonfinite_guard and not bool(np.all(np.isfinite(vals))):
+            self.counts["sanitized_nonfinite"] += 1
+            self.counts["sanitized_dropped"] += 1
+            return None
+        if cfg.tau_max is not None and tau > cfg.tau_max:
+            self.counts["sanitized_stale"] += 1
+            if cfg.stale_mode == "drop":
+                self.counts["sanitized_dropped"] += 1
+                return None
+            a = _scaled(a, 1.0 / (1.0 + (tau - cfg.tau_max)))
+            vals = a.update.values if isinstance(a.update, SparseUpdate) \
+                else a.update
+        if cfg.clip_norm is not None:
+            nrm = float(np.linalg.norm(vals))
+            if nrm > cfg.clip_norm:
+                self.counts["sanitized_clipped"] += 1
+                a = _scaled(a, cfg.clip_norm / nrm)
+        return a
+
+
 # --------------------------------------------------------------------- mixins
 class _Base:
     def __init__(self, model: GlobalModel):
         self.model = model
         self.total_bits = 0.0
         self.staleness_log: list[int] = []
+        self.sanitizer: UpdateSanitizer | None = None
 
     def _tau(self, a: Arrival) -> int:
         return max(0, self.model.round - a.model_round)
+
+    def _admit(self, a: Arrival) -> Arrival | None:
+        """Charge wire bits, then run the sanitizer (if any)."""
+        self.total_bits += a.wire_bits
+        if self.sanitizer is None:
+            return a
+        return self.sanitizer.admit(self._tau(a), a)
 
     def on_arrival(self, t_now: float, a: Arrival) -> list[AggregationEvent]:
         raise NotImplementedError
@@ -112,24 +195,31 @@ class PeriodicAggregator(_Base):
     def __init__(self, model: GlobalModel):
         super().__init__(model)
         self.buffer: list[Arrival] = []
+        self.rejected: list[int] = []   # sanitizer-dropped senders to release
 
     def on_arrival(self, t_now, a):
-        self.total_bits += a.wire_bits
-        self.buffer.append(a)
+        adm = self._admit(a)
+        if adm is None:
+            self.rejected.append(a.device_id)
+            return []
+        self.buffer.append(adm)
         return []
 
     def on_round_boundary(self, t_now):
+        rejected, self.rejected = self.rejected, []
         if not self.buffer:
             self.model.round += 1  # empty round still advances the period
-            return [AggregationEvent(t_now, self.model.round, [], {})]
+            return [AggregationEvent(t_now, self.model.round,
+                                     sorted(set(rejected)), {})]
         # τ counts the round being FORMED: a device that trained on w^t and
         # lands in the aggregation producing w^{t+k} has τ = k = ⌈d_i/T̃⌉
         # (the equivalence the φ-solver relies on, paper Sec. 2.2).
         stale = {a.device_id: self._tau(a) + 1 for a in self.buffer}
         self.staleness_log.extend(stale.values())
         self.model.apply_mean([a.update for a in self.buffer])
-        ev = AggregationEvent(t_now, self.model.round,
-                              [a.device_id for a in self.buffer], stale)
+        release = [a.device_id for a in self.buffer]
+        release += sorted(set(rejected) - set(release))
+        ev = AggregationEvent(t_now, self.model.round, release, stale)
         self.buffer = []
         return [ev]
 
@@ -143,8 +233,10 @@ class BufferedAggregator(_Base):
         self.buffer: list[Arrival] = []
 
     def on_arrival(self, t_now, a):
-        self.total_bits += a.wire_bits
-        self.buffer.append(a)
+        adm = self._admit(a)
+        if adm is None:
+            return []   # simulator's buffered fallback restarts the sender
+        self.buffer.append(adm)
         if len(self.buffer) < self.K:
             return []
         stale = {x.device_id: self._tau(x) for x in self.buffer}
@@ -167,7 +259,9 @@ class AsyncAggregator(_Base):
         self.mix_eta = mix_eta
 
     def on_arrival(self, t_now, a):
-        self.total_bits += a.wire_bits
+        a = self._admit(a)
+        if a is None:
+            return []   # simulator's buffered fallback restarts the sender
         tau = self._tau(a)
         self.staleness_log.append(tau)
         weight = self.mix_eta * (1.0 + tau) ** (-self.poly_a)
@@ -191,6 +285,7 @@ class SyncAggregator(_Base):
         self.N = num_devices
         self.deadline = deadline
         self.buffer: list[Arrival] = []
+        self.rejected: list[int] = []
         self.round_start = 0.0
         self.expected: set[int] | None = None
 
@@ -199,13 +294,19 @@ class SyncAggregator(_Base):
         self.expected = set(device_ids)
 
     def on_arrival(self, t_now, a):
-        self.total_bits += a.wire_bits
-        if (self.deadline is not None
+        adm = self._admit(a)
+        if adm is None:
+            # sanitizer rejection: the update is dropped (bits were spent)
+            # but the sender must still be released at the barrier or the
+            # next round can never complete
+            self.expected.discard(a.device_id)
+            self.rejected.append(a.device_id)
+        elif (self.deadline is not None
                 and t_now - self.round_start > self.deadline):
             # straggler mitigation: too late, drop (bits were still spent)
             self.expected.discard(a.device_id)
         else:
-            self.buffer.append(a)
+            self.buffer.append(adm)
             self.expected.discard(a.device_id)
         if self.expected:
             return []
@@ -218,8 +319,10 @@ class SyncAggregator(_Base):
         release = [x.device_id for x in self.buffer] + list(
             stale.keys() - {x.device_id for x in self.buffer})
         ev = AggregationEvent(t_now, self.model.round,
-                              sorted({*release, *stale}), stale)
+                              sorted({*release, *stale, *self.rejected}),
+                              stale)
         self.buffer = []
+        self.rejected = []
         return [ev]
 
 

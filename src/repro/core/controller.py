@@ -64,6 +64,7 @@ class FedLuckController:
     def __post_init__(self):
         self._profiles: dict[int, DeviceProfile] = {}
         self._plans: dict[int, Plan] = {}
+        self.replans = 0   # drift-triggered re-solves (not first registration)
 
     # ------------------------------------------------------------- membership
     def register(self, profile: DeviceProfile) -> Plan:
@@ -87,6 +88,8 @@ class FedLuckController:
                         abs(profile.beta - old.beta) / max(old.beta, 1e-12))
             if drift <= self.replan_tolerance and profile.device_id in self._plans:
                 return self._plans[profile.device_id]
+        if old is not None:
+            self.replans += 1
         plan = self._solve(profile)
         self._plans[profile.device_id] = plan
         return plan

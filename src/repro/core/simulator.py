@@ -37,12 +37,30 @@ Communication accounting follows the paper: transmitted data ∝ δ
 (bits = rate·d·32, time = rate·β). Strict values/indices accounting is
 available via `count_index_bits=True`.
 
-Fault tolerance hooks: a `FailureSchedule` (repro.ft) injects device
-crashes — an in-flight upload inside a failure window is lost, and the
-device re-registers at recovery (elastic membership; the FedLuck controller
-re-plans). Stragglers are devices whose α drifts mid-run. Failure-injected
-runs always use the sequential path: crash/recovery interleaving is
-inherently per-device.
+Resilience (repro.ft) is first-class in BOTH engines — failure-injected
+runs no longer fall back to the sequential path. A `FailureSchedule`
+injects device crashes: an upload in flight when an outage begins is lost
+and the device restarts at recovery with the then-current model. A
+`LossyChannel` models per-device upload loss with timeout/backoff
+retransmission (each attempt charged full simulated upload time and wire
+bits, so Eq. 5 stays honest under retries), time-varying bandwidth
+(`BandwidthDrift`), and NaN-corrupting links; `StragglerDrift` slows a
+device's α mid-run. The batched drain treats all of these as scheduling
+constraints: cycle outcomes (arrival / loss / retry schedule) are computed
+host-side at heap-pop time — they depend only on per-device RNG streams,
+never on the payload — so lost cycles still run their compute (EF
+residual semantics match the sequential engine), retry and recovery
+starts re-enter the heap mid-drain in exact event order, and the drain
+horizon uses true arrival times including retransmission delays. Batched
+and sequential engines stay bitwise identical on failure-injected,
+lossy-channel, drifting fleets (tests/test_simulator_batched.py).
+Server-side, an `UpdateSanitizer` (core.aggregation) guards aggregation
+against NaN/Inf payloads, norm outliers, and zombie updates past a
+staleness cap; a `FedLuckController` passed to the simulator turns
+observed α/β drift into mid-run re-plans. Per-category drop/retry/replan
+counters surface in `History.counters` and `Record.drops`;
+`benchmarks/chaos_bench.py` sweeps loss × crash × drift for FedLuck vs.
+the baselines.
 """
 from __future__ import annotations
 
@@ -58,7 +76,8 @@ import numpy as np
 
 from repro.core import compression as C
 from repro.core.aggregation import (Arrival, GlobalModel, PeriodicAggregator,
-                                    SparseUpdate, SyncAggregator,
+                                    SanitizerConfig, SparseUpdate,
+                                    SyncAggregator, UpdateSanitizer,
                                     make_aggregator)
 from repro.core import factor
 from repro.core.controller import DeviceProfile, FedLuckController
@@ -112,11 +131,16 @@ class Record:
     loss: float
     gbits: float
     mean_staleness: float
+    drops: int = 0      # cumulative lost/dropped/sanitized updates so far
 
 
 @dataclasses.dataclass
 class History:
     records: list[Record] = dataclasses.field(default_factory=list)
+    # final fault/resilience counters (crash losses, channel retries/drops,
+    # sanitizer rejections, controller re-plans) — see
+    # AFLSimulator.fault_counters
+    counters: dict = dataclasses.field(default_factory=dict)
 
     def time_to_accuracy(self, target: float) -> float | None:
         for r in self.records:
@@ -168,7 +192,9 @@ class AFLSimulator:
                  eta_l: float = 0.05, eta_g: float = 1.0,
                  momentum: float = 0.9, seed: int = 0,
                  client_indices: list[np.ndarray] | None = None,
-                 failure_schedule=None, count_index_bits: bool = False,
+                 failure_schedule=None, channel=None, stragglers=None,
+                 controller: FedLuckController | None = None,
+                 sanitizer=None, count_index_bits: bool = False,
                  strategy_kwargs: dict | None = None,
                  engine: str = "batched", prefetch: int = 0):
         if engine not in ("batched", "sequential"):
@@ -177,12 +203,28 @@ class AFLSimulator:
         self.devices = {d.profile.device_id: d for d in devices}
         self.round_period = float(round_period)
         self.eta_l, self.eta_g, self.momentum = eta_l, eta_g, momentum
+        # ---- fault models (all optional, both engines):
+        # failure_schedule: repro.ft.FailureSchedule crash windows
+        # channel: repro.ft.LossyChannel (loss/retry/drift/corruption);
+        #     stateful — give each simulator its own instance
+        # stragglers: list[repro.ft.StragglerDrift] α slowdowns
+        # controller: FedLuckController fed observed α/β each cycle for
+        #     drift-triggered mid-run re-plans (pass the instance that
+        #     planned the fleet, or the first observation re-solves)
         self.failure_schedule = failure_schedule
+        self.channel = channel
+        self._stragglers = list(stragglers or [])
+        self.controller = controller
+        self._crash_lost = 0
+        if controller is not None:
+            # a re-plan changes k mid-run; a prefetch thread would already
+            # hold stale-k stacked batches, so force synchronous stacking
+            prefetch = 0
         self.count_index_bits = count_index_bits
         self.strategy_name = strategy
         self.rng = np.random.RandomState(seed)
         self.engine = engine
-        self._batched = engine == "batched" and failure_schedule is None
+        self._batched = engine == "batched"
         self.events_processed = 0
 
         # ---- params / flat spec
@@ -194,6 +236,10 @@ class AFLSimulator:
         if strategy in ("sync", "fedavg", "fedavg_topk"):
             skw.setdefault("num_devices", len(devices))
         self.agg = make_aggregator(strategy, self.model, **skw)
+        if sanitizer is not None:
+            if isinstance(sanitizer, SanitizerConfig):
+                sanitizer = UpdateSanitizer(sanitizer)
+            self.agg.sanitizer = sanitizer
 
         # ---- per-client data
         from repro.data.pipeline import DataLoader, StackedLoader
@@ -336,8 +382,11 @@ class AFLSimulator:
         return bkey[1] in _SPARSE_WIRE and bkey[2] != "full"
 
     def _bucket_fn(self, bkey: tuple, P: int):
-        """One jitted dispatch for a chunk of P same-bucket cycles."""
-        cache_key = (bkey, P)
+        """One jitted dispatch for a chunk of P same-bucket cycles. The
+        bucket's k-cap joins the cache key: a mid-run re-plan can change
+        which δ_i share a band, and a fn compiled for the old (smaller)
+        cap would silently truncate the new bucket's top-k selection."""
+        cache_key = (bkey, P, self._bucket_kcap.get(bkey))
         if cache_key in self._bucket_fns:
             return self._bucket_fns[cache_key]
         _, name, delta, ef, ckw = bkey
@@ -419,22 +468,121 @@ class AFLSimulator:
         self._bucket_fns[cache_key] = bucket
         return bucket
 
-    def _cycle_span(self, did: int) -> float:
+    def _alpha_mult(self, did: int, t: float) -> float:
+        """Straggler-drift α multiplier active for a device at time t."""
+        m = 1.0
+        for s in self._stragglers:
+            if s.device_id == did and s.start <= t:
+                m *= s.alpha_multiplier
+        return m
+
+    def _cycle_span(self, did: int, t: float | None = None) -> float:
         spec = self.devices[did]
-        return spec.plan.k * spec.profile.alpha + spec.rate * spec.profile.beta
+        a = spec.profile.alpha
+        if t is not None:
+            m = self._alpha_mult(did, t)
+            if m != 1.0:
+                a = a * m
+        return spec.plan.k * a + spec.rate * spec.profile.beta
+
+    # ----------------------------------------------------- fault-model helpers
+    def _maybe_replan(self, did: int, t: float) -> None:
+        """Feed observed α/β into the controller; apply a drift-triggered
+        re-plan to the device (new k/δ; batched loader + buckets rebuilt).
+        Called at cycle start in both engines, so the event timelines stay
+        engine-identical."""
+        if self.controller is None:
+            return
+        spec = self.devices[did]
+        beta_m = (self.channel.beta_multiplier(did, t)
+                  if self.channel is not None else 1.0)
+        obs = DeviceProfile(did, spec.profile.alpha * self._alpha_mult(did, t),
+                            spec.profile.beta * beta_m,
+                            spec.profile.bandwidth_bps)
+        plan = self.controller.update_profile(obs)
+        if plan.k == spec.plan.k and plan.delta == spec.plan.delta:
+            return
+        spec.plan = plan
+        if self._batched:
+            old = self._stacked.pop(did, None)
+            if old is not None:
+                old.close()
+            from repro.data.pipeline import StackedLoader
+            self._stacked[did] = StackedLoader(self.loaders[did], plan.k, 0)
+            self._plan_buckets()
+
+    def _schedule_upload(self, did: int, t: float
+                         ) -> tuple[float | None, float | None, int, bool]:
+        """Host-side outcome of the cycle a device starts at time t:
+        `(arrive_time, restart_at, attempts, corrupt)`. `arrive_time` is
+        None when the upload never lands (crash mid-flight or channel gave
+        up after max retries) — then `restart_at` says when the device
+        begins a fresh cycle. Consumes only the channel's per-device RNG
+        stream, so it is computable at heap-pop time before any compute is
+        dispatched."""
+        spec = self.devices[did]
+        corrupt = False
+        if self.channel is not None:
+            corrupt = self.channel.maybe_corrupt(did)
+            compute_end = t + spec.plan.k * spec.profile.alpha \
+                * self._alpha_mult(did, t)
+            arrive, attempts, give_up = self.channel.transmit(
+                did, compute_end, spec.rate * spec.profile.beta)
+        else:
+            arrive, attempts, give_up = t + self._cycle_span(did, t), 1, None
+        in_flight_end = arrive if arrive is not None else give_up
+        if self.failure_schedule is not None:
+            rec = self.failure_schedule.crash_recovery(did, t, in_flight_end)
+            if rec is not None:   # an outage opened mid-flight: upload lost
+                self._crash_lost += 1
+                return None, max(rec, t + 1e-9), attempts, corrupt
+        if arrive is None:
+            return None, give_up, attempts, corrupt
+        return arrive, None, attempts, corrupt
+
+    @staticmethod
+    def _poison(update):
+        """Corrupted-in-transit payload: every shipped value becomes NaN.
+        Only an aggregation-side sanitizer keeps this out of the model."""
+        if isinstance(update, SparseUpdate):
+            return SparseUpdate(np.full_like(update.values, np.nan),
+                                update.indices, update.dim)
+        return np.full_like(np.asarray(update), np.nan)
+
+    def fault_counters(self) -> dict:
+        """Resilience telemetry: crash losses, channel attempt/retry/drop/
+        corruption counts, sanitizer rejections, controller re-plans, plus
+        the cross-category `drops_total` that `Record.drops` snapshots."""
+        c = {"crash_lost": self._crash_lost}
+        if self.channel is not None:
+            c.update(self.channel.counters)
+        san = getattr(self.agg, "sanitizer", None)
+        if san is not None:
+            c.update(san.counts)
+        if self.controller is not None:
+            c["replans"] = self.controller.replans
+        c["drops_total"] = int(c["crash_lost"] + c.get("channel_dropped", 0)
+                               + c.get("sanitized_dropped", 0))
+        return c
 
     def _process_starts_batched(self, starts: list, push) -> None:
         """Run a drained batch of device cycles through bucketed vmap
-        dispatches. `starts` is [(t, (did, model_round))] in heap-pop order;
-        arrivals are pushed back in that same order so heap tie-breaking
-        (and the host RNG stream) match the sequential engine exactly.
+        dispatches. `starts` is [(t, did, model_round, arrive, attempts,
+        corrupt)] in heap-pop order, with the upload outcome already
+        resolved at drain time (`_schedule_upload`); arrivals are pushed
+        back in that same order so heap tie-breaking (and the host RNG
+        stream) match the sequential engine exactly. Lost cycles (crash or
+        channel give-up: arrive is None) are still dispatched — their
+        compute advances the loader, RNG, and EF residual exactly like the
+        sequential engine — but land no arrival (their restart event was
+        pushed during the drain).
 
         Two phases: dispatch every chunk of every bucket first (jitted CPU
         computations run asynchronously on XLA worker threads, so host-side
         stacking of the next chunk overlaps device compute of the previous
         one), then pull the payloads."""
         order = []
-        for t, (did, mr) in starts:
+        for t, did, mr, arrive, attempts, corrupt in starts:
             stacked = self._stacked[did].next()
             seed = self.rng.randint(0, 2 ** 31 - 1)
             order.append((t, did, mr, stacked, seed))
@@ -458,10 +606,14 @@ class AFLSimulator:
         for rec in pending:
             self._collect_chunk(rec, results)
 
-        for t, did, mr, _, _ in order:
+        for t, did, mr, arrive, attempts, corrupt in starts:
+            if arrive is None:
+                continue   # upload lost; compute ran, restart already queued
             update, bits = results[did]
-            finish = t + self._cycle_span(did)
-            push(finish, "arrival", Arrival(did, update, mr, bits, finish))
+            if corrupt:
+                update = self._poison(update)
+            push(arrive, "arrival", Arrival(did, update, mr, bits * attempts,
+                                            arrive))
 
     def _dispatch_chunk(self, bkey: tuple, items: list, flat):
         """Launch one vmapped dispatch for an exact power-of-two chunk of
@@ -506,16 +658,17 @@ class AFLSimulator:
                 else self.devices[did].rate * self.dim * 32.0)
 
     # ----------------------------------------------------------- device cycle
-    def _device_cycle(self, did: int, start_time: float, model_round: int,
-                      flat_model: np.ndarray):
-        """Sequential engine: compute one local round; return the Arrival
-        (or None if the device fails mid-cycle per the failure schedule)."""
+    def _device_compute(self, did: int) -> tuple[np.ndarray, Any]:
+        """Sequential engine: one local round + compression against the
+        current global model. Always runs — even when the upload is already
+        known to be lost — so the loader, host RNG, and EF residual advance
+        exactly as in the batched engine."""
         spec = self.devices[did]
         k = spec.plan.k
         loader = self.loaders[did]
         batches = [loader.next() for _ in range(k)]
         stacked = {kk: np.stack([b[kk] for b in batches]) for kk in batches[0]}
-        g = self._seq_round(jnp.asarray(flat_model), stacked)
+        g = self._seq_round(jnp.asarray(self.model.w), stacked)
 
         rngkey = jax.random.PRNGKey(self.rng.randint(0, 2 ** 31 - 1))
         if spec.error_feedback:
@@ -524,13 +677,7 @@ class AFLSimulator:
             self._residuals[did] = np.asarray(new_res)
         else:
             dense, strict_bits = self._compressor_fn(spec)(g, rngkey)
-
-        finish = start_time + self._cycle_span(did)
-        if self.failure_schedule is not None and \
-                self.failure_schedule.lost_in_flight(did, start_time, finish):
-            return None, self.failure_schedule.recovery_time(did, start_time)
-        bits = self._wire_bits(did, strict_bits)
-        return Arrival(did, np.asarray(dense), model_round, bits, finish), None
+        return np.asarray(dense), strict_bits
 
     # ------------------------------------------------------------- residual IO
     def residual_snapshot(self) -> tuple[np.ndarray, np.ndarray]:
@@ -598,23 +745,45 @@ class AFLSimulator:
                     # possible completion of the drained set: no aggregation
                     # (= model change) can land in between, so the whole
                     # group reads the same global model and batches safely.
-                    # A device may appear only once per drain — buffered
-                    # strategies can release the same device several times
-                    # at one timestamp, and those cycles chain through its
-                    # EF residual, so they must run in separate drains.
-                    starts = [(t, payload)]
-                    seen = {payload[0]}
-                    horizon = t + self._cycle_span(payload[0])
-                    while heap and heap[0][2] == "start" and \
-                            heap[0][0] <= min(horizon, max_sim_time) and \
-                            heap[0][3][0] not in seen:
-                        t2, _, _, p2 = heapq.heappop(heap)
-                        starts.append((t2, p2))
-                        seen.add(p2[0])
-                        horizon = min(horizon, t2 + self._cycle_span(p2[0]))
-                        last_t = t2
+                    # Each popped start resolves its upload outcome here, at
+                    # pop time: down devices just queue their recovery,
+                    # lost uploads (crash / channel give-up) queue their
+                    # restart immediately — re-entering the heap so the
+                    # drain sees them in exact sequential event order — and
+                    # delivered uploads bound the horizon with their TRUE
+                    # arrival time (retries included). A device may appear
+                    # only once per drain — buffered strategies can release
+                    # the same device several times at one timestamp, and
+                    # those cycles chain through its EF residual, so they
+                    # must run in separate drains.
+                    starts, seen, horizon = [], set(), math.inf
+                    while True:
+                        did, mr = payload
+                        if self.failure_schedule is not None and \
+                                self.failure_schedule.is_down(did, t):
+                            push(self.failure_schedule.recovery_time(did, t),
+                                 "start", (did, self.model.round))
+                        else:
+                            self._maybe_replan(did, t)
+                            arrive, restart_at, attempts, corrupt = \
+                                self._schedule_upload(did, t)
+                            if arrive is None:
+                                push(restart_at, "start",
+                                     (did, self.model.round))
+                            else:
+                                horizon = min(horizon, arrive)
+                            seen.add(did)
+                            starts.append(
+                                (t, did, mr, arrive, attempts, corrupt))
+                        if not (heap and heap[0][2] == "start"
+                                and heap[0][0] <= min(horizon, max_sim_time)
+                                and heap[0][3][0] not in seen):
+                            break
+                        t, _, _, payload = heapq.heappop(heap)
+                        last_t = t
                         self.events_processed += 1
-                    self._process_starts_batched(starts, push)
+                    if starts:
+                        self._process_starts_batched(starts, push)
                     continue
                 did, mr = payload
                 if self.failure_schedule is not None and \
@@ -622,12 +791,18 @@ class AFLSimulator:
                     push(self.failure_schedule.recovery_time(did, t), "start",
                          (did, self.model.round))
                     continue
-                arrival, retry_at = self._device_cycle(
-                    did, t, mr, self.model.w)
-                if arrival is None:  # crashed mid-cycle: lost update
-                    push(retry_at, "start", (did, self.model.round))
+                self._maybe_replan(did, t)
+                arrive, restart_at, attempts, corrupt = \
+                    self._schedule_upload(did, t)
+                update, strict_bits = self._device_compute(did)
+                if arrive is None:  # crashed mid-flight / channel gave up
+                    push(restart_at, "start", (did, self.model.round))
                 else:
-                    push(arrival.arrive_time, "arrival", arrival)
+                    if corrupt:
+                        update = self._poison(update)
+                    bits = self._wire_bits(did, strict_bits) * attempts
+                    push(arrive, "arrival",
+                         Arrival(did, update, mr, bits, arrive))
 
             elif kind == "arrival":
                 a: Arrival = payload
@@ -661,6 +836,7 @@ class AFLSimulator:
         # the LAST PROCESSED event time — never max_sim_time, which is inf
         # by default and would poison History.time_to_accuracy.
         self._eval(hist, t if heap else last_t)
+        hist.counters = self.fault_counters()
         return hist
 
     def _eval(self, hist: History, t: float):
@@ -674,7 +850,8 @@ class AFLSimulator:
             time=float(t), round=int(self.model.round),
             accuracy=float(acc), loss=float(loss),
             gbits=self.agg.total_bits / 1e9,
-            mean_staleness=float(np.mean(window)) if window else 0.0))
+            mean_staleness=float(np.mean(window)) if window else 0.0,
+            drops=self.fault_counters()["drops_total"]))
 
 
 # ------------------------------------------------------------ device builders
@@ -721,17 +898,24 @@ def plan_devices(profiles: list[DeviceProfile], method: str,
                  compressor_override: str | None = None,
                  error_feedback: bool = False,
                  compressor_kwargs: dict | None = None,
-                 k_grid: list[int] | None = None) -> list[DeviceSpec]:
+                 k_grid: list[int] | None = None,
+                 controller: FedLuckController | None = None
+                 ) -> list[DeviceSpec]:
     """Build DeviceSpecs for one of the 5 methods of the paper's Sec 4.
 
     `k_grid` (optional, methods that optimize k): snap each plan's k to the
     nearest grid value and re-solve δ at that k — see `_snap_k`.
+    `controller` (optional, fedluck only): plan through a caller-owned
+    controller instead of a throwaway — pass the same instance to
+    `AFLSimulator(controller=...)` so mid-run drift re-plans start from the
+    profiles that planned the fleet.
     """
     method = method.lower()
     ckw = dict(compressor_kwargs or {})
     specs = []
     if method == "fedluck":
-        ctl = FedLuckController(round_period, k_bounds, delta_bounds)
+        ctl = controller or FedLuckController(round_period, k_bounds,
+                                              delta_bounds)
         for p in profiles:
             plan = ctl.register(p)
             if k_grid:

@@ -1,3 +1,6 @@
-from repro.ft.failures import FailureSchedule, FailureWindow, StragglerDrift
+from repro.ft.channel import BandwidthDrift, LossyChannel, RetryPolicy
+from repro.ft.failures import (FailureSchedule, FailureWindow, StragglerDrift,
+                               merge_overlaps)
 
-__all__ = ["FailureSchedule", "FailureWindow", "StragglerDrift"]
+__all__ = ["BandwidthDrift", "FailureSchedule", "FailureWindow",
+           "LossyChannel", "RetryPolicy", "StragglerDrift", "merge_overlaps"]

@@ -65,7 +65,8 @@ def run_fl(args) -> dict:
     from repro.core.simulator import (AFLSimulator, STRATEGY_FOR_METHOD,
                                       make_heterogeneous_devices, plan_devices)
     from repro.data.partition import dirichlet_partition, iid_partition
-    from repro.ft import FailureSchedule
+    from repro.core.aggregation import SanitizerConfig
+    from repro.ft import FailureSchedule, LossyChannel
     from repro.models.small import make_task
 
     task = make_task(args.task, num_samples=args.samples,
@@ -87,14 +88,25 @@ def run_fl(args) -> dict:
     else:
         idx = iid_partition(len(task.dataset), args.devices, seed=args.seed)
 
-    failure = (FailureSchedule.random(args.devices, args.rounds
-                                      * args.round_period, seed=args.seed)
-               if args.inject_failures else None)
+    # --failure-rate N sets the per-device crash rate; the legacy
+    # --inject-failures switch keeps its historical default of 0.2
+    failure = None
+    if args.failure_rate > 0 or args.inject_failures:
+        failure = FailureSchedule.random(
+            args.devices, args.rounds * args.round_period,
+            rate_per_device=args.failure_rate or 0.2, seed=args.seed)
+    channel = (LossyChannel(loss_prob=args.loss_rate, seed=args.seed)
+               if args.loss_rate > 0 else None)
+    sanitizer = None
+    if args.tau_max is not None or args.clip_norm is not None:
+        sanitizer = SanitizerConfig(tau_max=args.tau_max,
+                                    clip_norm=args.clip_norm)
 
     sim = AFLSimulator(task, specs, STRATEGY_FOR_METHOD[args.method],
                        round_period=args.round_period, eta_l=args.eta_l,
                        eta_g=args.eta_g, seed=args.seed, client_indices=idx,
-                       failure_schedule=failure)
+                       failure_schedule=failure, channel=channel,
+                       sanitizer=sanitizer)
 
     mgr = CheckpointManager(args.ckpt_dir, max_to_keep=2) \
         if args.ckpt_dir else None
@@ -128,7 +140,8 @@ def run_fl(args) -> dict:
             sim.run(total_rounds=sim.model.round, eval_every=1).records)
     final = hist_all[-1]
     return {"final_accuracy": final.accuracy, "rounds": sim.model.round,
-            "gbits": final.gbits, "sim_time": final.time}
+            "gbits": final.gbits, "sim_time": final.time,
+            "fault_counters": sim.fault_counters()}
 
 
 # ------------------------------------------------------------- datacenter mode
@@ -247,6 +260,18 @@ def main(argv=None):
     ap.add_argument("--error-feedback", action="store_true")
     ap.add_argument("--noniid", action="store_true")
     ap.add_argument("--inject-failures", action="store_true")
+    ap.add_argument("--failure-rate", type=float, default=0.0,
+                    help="mean crash windows per device over the run "
+                         "(FailureSchedule.random rate_per_device)")
+    ap.add_argument("--loss-rate", type=float, default=0.0,
+                    help="per-attempt upload loss probability (LossyChannel "
+                         "with default retry/backoff policy)")
+    ap.add_argument("--tau-max", type=int, default=None,
+                    help="staleness cap: aggregation drops updates with "
+                         "τ > tau-max (enables the UpdateSanitizer)")
+    ap.add_argument("--clip-norm", type=float, default=None,
+                    help="L2 norm outlier guard on admitted updates "
+                         "(enables the UpdateSanitizer)")
     ap.add_argument("--eval-every", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")

@@ -3,8 +3,9 @@ import pytest
 
 from repro.core.aggregation import (Arrival, AsyncAggregator,
                                     BufferedAggregator, GlobalModel,
-                                    PeriodicAggregator, SyncAggregator,
-                                    make_aggregator)
+                                    PeriodicAggregator, SanitizerConfig,
+                                    SparseUpdate, SyncAggregator,
+                                    UpdateSanitizer, make_aggregator)
 
 
 def _arr(did, vec, rnd, t, bits=100.0):
@@ -78,6 +79,69 @@ class TestSync:
         evs = agg.on_arrival(5.0, _arr(1, [100.0], 0, 5.0))  # too late
         assert len(evs) == 1
         np.testing.assert_allclose(m.w, [-2.0])  # straggler excluded
+
+
+class TestSanitizer:
+    def test_nonfinite_rejected(self):
+        san = UpdateSanitizer(SanitizerConfig())
+        assert san.admit(0, _arr(0, [1.0, np.nan], 0, 0.1)) is None
+        assert san.admit(0, _arr(0, [np.inf, 0.0], 0, 0.1)) is None
+        ok = san.admit(0, _arr(0, [1.0, 2.0], 0, 0.1))
+        np.testing.assert_allclose(ok.update, [1.0, 2.0])
+        assert san.counts["sanitized_nonfinite"] == 2
+        assert san.counts["sanitized_dropped"] == 2
+
+    def test_nonfinite_sparse_payload(self):
+        san = UpdateSanitizer(SanitizerConfig())
+        u = SparseUpdate(np.asarray([np.nan], np.float32),
+                         np.asarray([1], np.int32), 4)
+        assert san.admit(0, Arrival(0, u, 0, 10.0, 0.1)) is None
+
+    def test_clip_rescales_to_norm(self):
+        san = UpdateSanitizer(SanitizerConfig(clip_norm=1.0))
+        a = san.admit(0, _arr(0, [3.0, 4.0], 0, 0.1))   # ‖u‖ = 5
+        np.testing.assert_allclose(a.update, [0.6, 0.8], rtol=1e-6)
+        assert san.counts["sanitized_clipped"] == 1
+        assert san.counts["sanitized_dropped"] == 0     # modified, not dropped
+        b = san.admit(0, _arr(0, [0.3, 0.4], 0, 0.1))   # under the cap
+        np.testing.assert_allclose(b.update, [0.3, 0.4])
+        assert san.counts["sanitized_clipped"] == 1
+
+    def test_tau_max_drop_and_downweight(self):
+        drop = UpdateSanitizer(SanitizerConfig(tau_max=2))
+        assert drop.admit(3, _arr(0, [1.0], 0, 0.1)) is None
+        assert drop.admit(2, _arr(0, [1.0], 0, 0.1)) is not None
+        assert drop.counts["sanitized_stale"] == 1
+        assert drop.counts["sanitized_dropped"] == 1
+
+        dw = UpdateSanitizer(SanitizerConfig(tau_max=2,
+                                             stale_mode="downweight"))
+        a = dw.admit(4, _arr(0, [3.0], 0, 0.1))   # τ−τ_max = 2 → 1/3
+        np.testing.assert_allclose(a.update, [1.0], rtol=1e-6)
+        assert dw.counts["sanitized_dropped"] == 0
+
+    def test_periodic_releases_rejected_sender(self):
+        """A sanitizer-dropped device must still get the next model — a
+        silent drop would deadlock its training loop forever."""
+        m = GlobalModel(np.zeros(2))
+        agg = PeriodicAggregator(m)
+        agg.sanitizer = UpdateSanitizer(SanitizerConfig())
+        agg.on_arrival(0.3, _arr(0, [np.nan, 0.0], 0, 0.3))
+        agg.on_arrival(0.7, _arr(1, [0.0, 2.0], 0, 0.7))
+        evs = agg.on_round_boundary(1.0)
+        assert sorted(evs[0].release_to) == [0, 1]
+        np.testing.assert_allclose(m.w, [0.0, -2.0])  # only dev 1 admitted
+        assert agg.total_bits == 200.0  # rejected upload still paid its bits
+
+    def test_sync_releases_rejected_sender(self):
+        m = GlobalModel(np.zeros(1))
+        agg = SyncAggregator(m, num_devices=2)
+        agg.sanitizer = UpdateSanitizer(SanitizerConfig())
+        agg.begin_round(0.0, [0, 1])
+        agg.on_arrival(0.5, _arr(0, [np.nan], 0, 0.5))
+        evs = agg.on_arrival(0.9, _arr(1, [4.0], 0, 0.9))
+        assert sorted(evs[0].release_to) == [0, 1]
+        np.testing.assert_allclose(m.w, [-4.0])
 
 
 def test_factory():

@@ -1,10 +1,13 @@
-"""Fault tolerance: failures, stragglers, elastic membership, restart."""
+"""Fault tolerance: failures, stragglers, lossy channels, sanitization,
+elastic membership, restart."""
 import numpy as np
 import pytest
 
 from repro.core.simulator import (AFLSimulator, DeviceSpec, plan_devices,
                                   make_heterogeneous_devices)
-from repro.ft import FailureSchedule, FailureWindow
+from repro.ft import (BandwidthDrift, FailureSchedule, FailureWindow,
+                      LossyChannel, RetryPolicy, StragglerDrift,
+                      merge_overlaps)
 from repro.models.small import make_task
 
 
@@ -39,6 +42,100 @@ class TestFailureSchedule:
                                     seed=0)
         assert all(w.end > w.start for w in fs.windows)
 
+    def test_merge_overlaps_coalesces(self):
+        merged = merge_overlaps([FailureWindow(0, 4.0, 6.0),
+                                 FailureWindow(0, 1.0, 3.0),
+                                 FailureWindow(0, 2.0, 4.0),   # touches both
+                                 FailureWindow(1, 0.0, 1.0)])
+        assert merged == [FailureWindow(0, 1.0, 6.0),
+                          FailureWindow(1, 0.0, 1.0)]
+
+    def test_merge_overlaps_validates(self):
+        with pytest.raises(ValueError):
+            merge_overlaps([FailureWindow(0, 5.0, 5.0)])
+        with pytest.raises(ValueError):
+            FailureSchedule([FailureWindow(0, 5.0, 2.0)])
+
+    def test_merged_schedule_copy(self):
+        fs = FailureSchedule([FailureWindow(0, 2.0, 5.0),
+                              FailureWindow(0, 4.0, 7.0)])
+        assert fs.merge_overlaps().windows == [FailureWindow(0, 2.0, 7.0)]
+
+    def test_indexed_matches_naive_scan(self):
+        """O(log W) indexed queries agree with a brute-force window scan."""
+        fs = FailureSchedule.random(4, horizon=50.0, rate_per_device=3.0,
+                                    seed=7)
+        rng = np.random.RandomState(0)
+        for _ in range(300):
+            d = int(rng.randint(0, 5))          # incl. a device w/o windows
+            t = float(rng.uniform(-1.0, 55.0))
+            naive = any(w.device_id == d and w.start <= t < w.end
+                        for w in fs.windows)
+            assert fs.is_down(d, t) == naive
+        merged = merge_overlaps(fs.windows)
+        for _ in range(300):
+            d = int(rng.randint(0, 5))
+            s = float(rng.uniform(0.0, 50.0))
+            f = s + float(rng.uniform(0.0, 5.0))
+            naive = any(w.device_id == d and s < w.start < f for w in merged)
+            assert fs.lost_in_flight(d, s, f) == naive
+
+    def test_crash_recovery(self):
+        fs = FailureSchedule([FailureWindow(0, 2.0, 5.0)])
+        # outage opens at 2.0 inside the flight (1.0, 3.0) -> back up at 5.0
+        assert fs.crash_recovery(0, 1.0, 3.0) == 5.0
+        assert fs.crash_recovery(0, 2.5, 4.0) is None   # started while down
+        assert fs.crash_recovery(0, 5.5, 9.0) is None
+        assert fs.crash_recovery(1, 1.0, 3.0) is None
+
+
+class TestLossyChannel:
+    def test_clean_link_timing(self):
+        ch = LossyChannel(loss_prob=0.0)
+        arrive, attempts, give_up = ch.transmit(0, 10.0, 0.5)
+        assert (arrive, attempts, give_up) == (10.5, 1, 10.5)
+        assert ch.counters["delivered"] == 1
+        assert ch.counters["retries"] == 0
+
+    def test_always_lost_gives_up_with_backoff(self):
+        retry = RetryPolicy(max_attempts=3, timeout=0.25, backoff=2.0)
+        ch = LossyChannel(loss_prob=1.0, retry=retry)
+        arrive, attempts, give_up = ch.transmit(0, 0.0, 1.0)
+        assert arrive is None
+        assert attempts == 3
+        # 3 uploads of 1s + waits 0.25, 0.5 after the two lost non-final...
+        # every lost attempt waits: 0.25 + 0.5 + 1.0 after the 3rd
+        assert give_up == pytest.approx(3.0 + 0.25 + 0.5 + 1.0)
+        assert ch.counters == {"attempts": 3, "retries": 2, "delivered": 0,
+                               "channel_dropped": 1, "corrupted": 0}
+
+    def test_per_device_streams_independent_of_interleaving(self):
+        """Outcomes for a device depend only on its own draw order — the
+        property that keeps batched/sequential engines bitwise equal."""
+        a = LossyChannel(loss_prob=0.5, seed=3)
+        b = LossyChannel(loss_prob=0.5, seed=3)
+        outs_a = [a.transmit(0, t, 1.0) for t in range(4)]
+        outs_b = []
+        for t in range(4):                      # interleave another device
+            b.transmit(7, float(t), 1.0)
+            outs_b.append(b.transmit(0, float(t), 1.0))
+        assert outs_a == outs_b
+
+    def test_bandwidth_drift_scales_attempts(self):
+        ch = LossyChannel(drift=[BandwidthDrift(0, 5.0, 3.0)])
+        arrive, _, _ = ch.transmit(0, 1.0, 1.0)
+        assert arrive == 2.0                    # before drift: clean β
+        arrive, _, _ = ch.transmit(0, 6.0, 1.0)
+        assert arrive == 9.0                    # after drift: 3× slower
+        assert ch.beta_multiplier(1, 10.0) == 1.0   # other devices untouched
+
+    def test_reset_rearms_streams(self):
+        ch = LossyChannel(loss_prob=0.5, corrupt_prob=0.5, seed=1)
+        first = [ch.transmit(0, 0.0, 1.0) for _ in range(5)]
+        ch.reset()
+        again = [ch.transmit(0, 0.0, 1.0) for _ in range(5)]
+        assert first == again
+
 
 class TestSimulatorUnderFailures:
     def test_training_survives_device_crashes(self, task):
@@ -64,6 +161,127 @@ class TestSimulatorUnderFailures:
         # only device 1's uploads were ever aggregated
         per_upload = specs[1].rate * sim.dim * 32
         assert sim.agg.total_bits % per_upload == 0
+
+
+class TestSanitizedRun:
+    def test_nan_and_lossy_devices_complete_with_finite_loss(self, task):
+        """Acceptance: a fleet with a NaN-corrupting link and upload loss
+        completes with nonzero sanitization/drop counters surfaced in
+        History and a finite final loss."""
+        profs = make_heterogeneous_devices(4, 3.2e6, seed=0)
+        specs = plan_devices(profs, "fedluck", 1.0, k_bounds=(1, 8))
+        ch = LossyChannel(loss_prob={0: 0.5}, corrupt_prob={1: 0.8},
+                          retry=RetryPolicy(max_attempts=2), seed=2)
+        from repro.core.aggregation import SanitizerConfig
+        sim = AFLSimulator(task, specs, "periodic", round_period=1.0,
+                           eta_l=0.05, seed=0, channel=ch,
+                           sanitizer=SanitizerConfig(tau_max=6))
+        h = sim.run(total_rounds=12, eval_every=4)
+        assert np.isfinite(h.records[-1].loss)
+        assert np.all(np.isfinite(sim.model.w))
+        assert h.counters["sanitized_nonfinite"] > 0   # NaNs were caught
+        assert h.counters["retries"] > 0
+        assert h.counters["drops_total"] > 0
+        assert h.records[-1].drops == h.counters["drops_total"]
+        sim.close()
+
+    def test_without_sanitizer_nans_poison_model(self, task):
+        """The guard is load-bearing: the same corrupting fleet without a
+        sanitizer drives the global model non-finite."""
+        profs = make_heterogeneous_devices(2, 3.2e6, seed=0)
+        specs = plan_devices(profs, "fedper", 1.0, fixed_k=2,
+                             fixed_delta=0.5)
+        ch = LossyChannel(corrupt_prob=1.0, seed=2)
+        sim = AFLSimulator(task, specs, "periodic", round_period=1.0,
+                           seed=0, channel=ch)
+        sim.run(total_rounds=3, eval_every=0)
+        assert not np.all(np.isfinite(sim.model.w))
+        sim.close()
+
+
+class TestDriftReplan:
+    def test_straggler_drift_triggers_midrun_replan(self, task):
+        """A device slowing down mid-run (α drift past the controller's
+        tolerance) gets a fresh, smaller-k plan without restarting."""
+        from repro.core.controller import FedLuckController
+        profs = make_heterogeneous_devices(3, 3.2e6, seed=0)
+        ctl = FedLuckController(1.0, k_bounds=(1, 8))
+        specs = plan_devices(profs, "fedluck", 1.0, k_bounds=(1, 8),
+                             controller=ctl)
+        k_before = {s.profile.device_id: s.plan.k for s in specs}
+        sim = AFLSimulator(task, specs, "periodic", round_period=1.0,
+                           seed=0, controller=ctl,
+                           stragglers=[StragglerDrift(0, 2.0, 6.0)])
+        h = sim.run(total_rounds=10, eval_every=0)
+        assert ctl.replans > 0
+        assert h.counters["replans"] == ctl.replans
+        # the straggler runs fewer local steps under its 6× slower α
+        assert sim.devices[0].plan.k < k_before[0]
+        # devices that did not drift keep their original plans
+        assert sim.devices[1].plan.k == k_before[1]
+        sim.close()
+
+
+class TestResumeUnderFailure:
+    """Checkpoint resume mid-run with an ACTIVE FailureSchedule must replay
+    deterministically: the resumed segment sees the same crash windows as
+    the uninterrupted run's same segment (run() restarts the simulated
+    clock per segment, exactly like launch/train.py's segment loop)."""
+
+    @staticmethod
+    def _sim():
+        from repro.core.controller import DeviceProfile
+        from repro.core.factor import Plan
+        # batch_size >= client subset -> loader-state-free dynamics, so a
+        # fresh sim resumed from a checkpoint is comparable (same trick as
+        # tests/test_checkpoint.py::TestFLResume)
+        task = make_task("mlp_fmnist", num_samples=64, test_samples=32,
+                         batch_size=64)
+        # device 0's first upload (in flight 0 -> 0.22) is killed by the
+        # outage opening at 0.1, every segment
+        fs = FailureSchedule([FailureWindow(0, 0.1, 0.3),
+                              FailureWindow(1, 1.0, 1.4)])
+        specs = [
+            DeviceSpec(DeviceProfile(i, 0.01 * (i + 1), 2.0 + i),
+                       Plan(2, 0.1, 0.0, 0.02 * (i + 1) + 0.1 * (2.0 + i), 0),
+                       "topk", True)
+            for i in range(2)]
+        return AFLSimulator(task, specs, "periodic", round_period=1.0,
+                            eta_l=0.05, seed=0, failure_schedule=fs)
+
+    def test_resume_replays_failure_segment_deterministically(self, tmp_path):
+        from repro.checkpoint import CheckpointManager
+        from repro.launch.train import fl_ckpt_state, restore_fl_state
+
+        # uninterrupted: two segments on one simulator
+        sim_a = self._sim()
+        sim_a.run(total_rounds=4, eval_every=0)
+        h_a = sim_a.run(total_rounds=8, eval_every=2)
+        sim_a.close()
+
+        # interrupted: segment 1, checkpoint, "crash", restore, segment 2
+        sim_b = self._sim()
+        sim_b.run(total_rounds=4, eval_every=0)
+        assert sim_b.fault_counters()["crash_lost"] > 0  # faults were live
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        mgr.save(sim_b.model.round, fl_ckpt_state(sim_b))
+        sim_b.close()
+
+        sim_c = self._sim()
+        restore_fl_state(sim_c, mgr.restore(mgr.latest_step()))
+        assert sim_c.model.round == 4
+        h_c = sim_c.run(total_rounds=8, eval_every=2)
+
+        np.testing.assert_allclose(sim_c.model.w, sim_a.model.w,
+                                   rtol=0, atol=2e-4)
+        # identical event timelines: times/rounds/bits exact, metrics close
+        # (drops excluded — the fresh sim's counters restart at zero)
+        assert [(r.time, r.round) for r in h_c.records] == \
+               [(r.time, r.round) for r in h_a.records]
+        for rc, ra in zip(h_c.records, h_a.records):
+            assert rc.loss == pytest.approx(ra.loss, abs=2e-3)
+        assert h_c.counters["crash_lost"] > 0   # segment 2 replayed faults
+        sim_c.close()
 
 
 class TestStragglerMitigation:

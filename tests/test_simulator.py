@@ -98,9 +98,20 @@ class TestController:
         ctl = FedLuckController(round_period=1.0, replan_tolerance=0.25)
         p0 = ctl.register(DeviceProfile(0, 0.02, 10.0))
         same = ctl.update_profile(DeviceProfile(0, 0.021, 10.0))  # 5% drift
-        assert same == p0
+        assert same is p0       # below tolerance: cached plan, no re-solve
+        assert ctl.replans == 0
         new = ctl.update_profile(DeviceProfile(0, 0.2, 10.0))     # 10x drift
-        assert new.k <= p0.k
+        assert ctl.replans == 1
+        assert new.k < p0.k     # slower α → fewer local steps fit the period
+        # the re-solved plan becomes the new cache baseline
+        assert ctl.update_profile(DeviceProfile(0, 0.21, 10.0)) is new
+        assert ctl.replans == 1
+
+    def test_replan_counts_beta_drift(self):
+        ctl = FedLuckController(round_period=1.0, replan_tolerance=0.25)
+        ctl.register(DeviceProfile(0, 0.02, 10.0))
+        ctl.update_profile(DeviceProfile(0, 0.02, 30.0))  # 3× slower link
+        assert ctl.replans == 1
 
     def test_modes_match_table2_baselines(self):
         prof = DeviceProfile(0, 0.05, 25.0)

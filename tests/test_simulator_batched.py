@@ -91,13 +91,97 @@ class TestChunking:
             assert sum(sizes) == n
             assert all(s & (s - 1) == 0 for s in sizes)  # powers of two
 
-    def test_failure_schedule_forces_sequential(self, task):
+    def test_failure_schedule_keeps_batched_engine(self, task):
+        """Fault-injected runs no longer fall back to the sequential path."""
         from repro.ft import FailureSchedule
         fs = FailureSchedule.random(4, 10.0, seed=0)
         sim = AFLSimulator(task, _mixed_fleet(), "periodic",
                            failure_schedule=fs, engine="batched")
-        assert not sim._batched
+        assert sim._batched
         sim.close()
+
+
+def _fault_run(task, engine, *, rounds=8, strategy="periodic",
+               channel=False, sanitizer=False, controller=False):
+    """Run a failure-injected mixed fleet; fresh stateful fault models per
+    call so batched/sequential consume identical RNG streams."""
+    from repro.core.aggregation import SanitizerConfig
+    from repro.core.controller import FedLuckController
+    from repro.ft import (BandwidthDrift, FailureSchedule, LossyChannel,
+                          StragglerDrift)
+    kwargs = {"failure_schedule": FailureSchedule.random(
+        4, 12.0, rate_per_device=1.0, mean_downtime=0.6, seed=4)}
+    if channel:
+        kwargs["channel"] = LossyChannel(
+            loss_prob=0.3, corrupt_prob=0.1,
+            drift=[BandwidthDrift(1, 2.0, 3.0)], seed=7)
+        # NaN-corrupted payloads must be sanitized out — otherwise the
+        # model itself goes NaN and bitwise comparison is meaningless
+        sanitizer = True
+    if sanitizer:
+        kwargs["sanitizer"] = SanitizerConfig(tau_max=8)
+    if controller:
+        kwargs["controller"] = FedLuckController(1.0, (1, 8), (0.05, 1.0))
+        kwargs["stragglers"] = [StragglerDrift(2, 3.0, 4.0)]
+    sim = AFLSimulator(task, _mixed_fleet(), strategy, round_period=1.0,
+                       seed=3, engine=engine, **kwargs)
+    h = sim.run(total_rounds=rounds, eval_every=2)
+    _, res = sim.residual_snapshot()
+    out = {
+        "w": np.asarray(sim.model.w).copy(),
+        "res": np.asarray(res).copy(),
+        "bits": sim.agg.total_bits,
+        "records": [(r.time, r.round, r.accuracy, r.loss, r.gbits,
+                     r.mean_staleness, r.drops) for r in h.records],
+        "events": sim.events_processed,
+        "counters": dict(h.counters),
+    }
+    sim.close()
+    return out
+
+
+class TestFaultEquivalence:
+    """Acceptance gate: a failure-injected mixed-k/δ/EF fleet is *bitwise*
+    identical across engines — crashes, lossy links, retries, drift,
+    sanitization, and mid-run re-plans all included."""
+
+    def test_crash_injected_bitwise_equal(self, task):
+        b = _fault_run(task, "batched")
+        s = _fault_run(task, "sequential")
+        assert b["counters"]["crash_lost"] > 0   # faults actually fired
+        assert np.array_equal(b["w"], s["w"])
+        assert np.array_equal(b["res"], s["res"])
+        assert b["bits"] == s["bits"]
+        assert b["records"] == s["records"]
+        assert b["events"] == s["events"]
+        assert b["counters"] == s["counters"]
+
+    def test_chaos_bitwise_equal(self, task):
+        """Crash windows + lossy/corrupting channel + bandwidth drift +
+        sanitizer, all at once."""
+        b = _fault_run(task, "batched", channel=True)
+        s = _fault_run(task, "sequential", channel=True)
+        assert b["counters"]["retries"] > 0
+        assert b["counters"]["drops_total"] > 0
+        assert np.array_equal(b["w"], s["w"])
+        assert np.array_equal(b["res"], s["res"])
+        assert b["records"] == s["records"]
+        assert b["counters"] == s["counters"]
+
+    def test_drift_replan_bitwise_equal(self, task):
+        """Straggler drift feeding a controller re-plans k mid-run in both
+        engines at the same events."""
+        b = _fault_run(task, "batched", controller=True)
+        s = _fault_run(task, "sequential", controller=True)
+        assert np.array_equal(b["w"], s["w"])
+        assert b["records"] == s["records"]
+        assert b["counters"] == s["counters"]
+
+    def test_fedbuff_crash_bitwise_equal(self, task):
+        b = _fault_run(task, "batched", strategy="fedbuff", rounds=5)
+        s = _fault_run(task, "sequential", strategy="fedbuff", rounds=5)
+        assert np.array_equal(b["w"], s["w"])
+        assert b["records"] == s["records"]
 
 
 class TestSatellites:
