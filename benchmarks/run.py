@@ -13,7 +13,8 @@ def main() -> None:
                                          fig2_time_to_accuracy,
                                          fig3_comm_consumption, tab1_noniid,
                                          tab2_joint_vs_single)
-    from benchmarks.kernel_bench import kernel_microbench, sync_crossover
+    from benchmarks.kernel_bench import (kernel_microbench, podsync_rows,
+                                         sync_crossover)
     from benchmarks.sim_bench import smoke_rows as sim_smoke_rows
     from benchmarks.chaos_bench import smoke_rows as chaos_smoke_rows
 
@@ -25,6 +26,7 @@ def main() -> None:
         "tab2": tab2_joint_vs_single,
         "kernels": kernel_microbench,
         "sync": sync_crossover,
+        "podsync": podsync_rows,
         "sim": sim_smoke_rows,
         "chaos": chaos_smoke_rows,
     }

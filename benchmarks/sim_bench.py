@@ -110,7 +110,7 @@ def _pair(num_devices: int, rounds: int, *, task, ef: bool = False,
     return out
 
 
-def run_bench(smoke: bool = False, seed: int = 0) -> dict:
+def run_bench(smoke: bool = False, seed: int = 0, prefetch: int = 0) -> dict:
     from repro.models.small import make_task
 
     micro = make_task("mlp_micro", num_samples=2000, test_samples=200,
@@ -118,23 +118,26 @@ def run_bench(smoke: bool = False, seed: int = 0) -> dict:
     report = {"bench": "simulator_events_per_sec",
               "strategy": "periodic (FedLuck plans)", "backend": "cpu",
               "unit": "simulated events/sec; wall seconds per sim second",
-              "methodology": "steady-state: jit warmup excluded (warm_s)"}
+              "methodology": "steady-state: jit warmup excluded (warm_s)",
+              "prefetch": prefetch}
     if smoke:
         report["mode"] = "smoke"
-        report["headline"] = _pair(4, 3, task=micro, warmup_rounds=2)
+        report["headline"] = _pair(4, 3, task=micro, warmup_rounds=2,
+                                   prefetch=prefetch)
         report["fleets"] = [report["headline"]]
         return report
 
     report["mode"] = "full"
     # acceptance headline: 100-device / 50-round periodic-FedLuck run on the
     # engine-throughput (compute-light) configuration
-    report["headline"] = _pair(100, 50, task=micro)
-    fleets = [_pair(10, 20, task=micro), _pair(50, 20, task=micro),
-              _pair(200, 20, task=micro)]
+    report["headline"] = _pair(100, 50, task=micro, prefetch=prefetch)
+    fleets = [_pair(10, 20, task=micro, prefetch=prefetch),
+              _pair(50, 20, task=micro, prefetch=prefetch),
+              _pair(200, 20, task=micro, prefetch=prefetch)]
     # EF exercises the device-resident stacked-residual path
-    fleets.append(_pair(50, 10, task=micro, ef=True))
+    fleets.append(_pair(50, 10, task=micro, ef=True, prefetch=prefetch))
     # prefetch row: background stacking thread (pays off with spare cores)
-    fleets.append(_pair(50, 10, task=micro, prefetch=1))
+    fleets.append(_pair(50, 10, task=micro, prefetch=max(1, prefetch)))
     # compute-bound regime: both engines pay identical local-round FLOPs on
     # one core, so the gap narrows to the eliminated dispatch/sort overhead
     fmnist = make_task("mlp_fmnist", num_samples=2000, test_samples=200,
@@ -164,9 +167,14 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default="",
                     help="write the JSON report here (default: stdout only)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefetch", type=int, default=0,
+                    help="StackedLoader prefetch depth for every fleet row "
+                         "(bitwise-identical results; pays off with spare "
+                         "cores)")
     args = ap.parse_args(argv)
 
-    report = run_bench(smoke=args.smoke, seed=args.seed)
+    report = run_bench(smoke=args.smoke, seed=args.seed,
+                       prefetch=args.prefetch)
     text = json.dumps(report, indent=1)
     print(text)
     if args.out:

@@ -33,16 +33,22 @@ import numpy as np
 
 
 class SparseUpdate(NamedTuple):
-    """Compact (values, indices) wire payload of a sparse pseudo-gradient.
+    """Compact (values, indices) wire payload of a sparse pseudo-gradient —
+    the same wire format the pod-sync compact path ships
+    (dist.collectives): fixed-capacity value/index slots plus a kept-count
+    header.
 
     The batched simulator engine pulls arrivals off-device in this form
     (k values + k int32 indices) instead of a dense d-length vector. Zero
     values are permitted (padding slots); indices must be unique so that
-    scatter-add equals dense addition bitwise.
+    scatter-add equals dense addition bitwise. `kept` is the header: the
+    number of live (non-padding) slots, or None when the producer only
+    knows it on device.
     """
     values: np.ndarray
     indices: np.ndarray
     dim: int
+    kept: int | None = None
 
     def dense(self) -> np.ndarray:
         out = np.zeros((self.dim,), np.float32)
@@ -122,7 +128,7 @@ class SanitizerConfig:
 def _scaled(a: Arrival, w: float) -> Arrival:
     u = a.update
     if isinstance(u, SparseUpdate):
-        u = SparseUpdate(u.values * np.float32(w), u.indices, u.dim)
+        u = SparseUpdate(u.values * np.float32(w), u.indices, u.dim, u.kept)
     else:
         u = u * np.float32(w)
     return dataclasses.replace(a, update=u)

@@ -61,6 +61,27 @@ def num_keep(dim: int, rate: float) -> int:
     return max(1, min(dim, int(round(rate * dim))))
 
 
+# -------------------------------------------------------------- wire payload
+HEADER_BITS = 32   # i32 kept-count header of the compact wire format
+
+# Compressors whose payload ships as the compact (values, indices, count)
+# wire format rather than a dense code.
+SPARSE_WIRE = ("topk", "topk_threshold", "randk")
+
+
+def sparse_wire(name: str, dim: int, rate: float) -> bool:
+    """True when `name`'s payload ships compact: explicit (values, indices)
+    plus a kept-count header. A δ = 1 top-k ships dense — its index vector
+    would be a d-length iota and the payload IS the vector."""
+    return name in SPARSE_WIRE and num_keep(dim, rate) < dim
+
+
+def payload_bits(cc: Compressed) -> jax.Array:
+    """Bits of `cc` as actually shipped: the compressor's strict value/index
+    bits plus the kept-count header compact payloads carry."""
+    return cc.wire_bits + (HEADER_BITS if cc.indices is not None else 0)
+
+
 # ----------------------------------------------------------------- compressors
 def topk(g: jax.Array, rate: float) -> Compressed:
     """Paper's compressor C_δ: keep the δ·d largest-|g| coordinates."""

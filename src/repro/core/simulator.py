@@ -33,9 +33,14 @@ Two execution engines share the same event semantics:
   in a host-side per-device dict. Kept as the equivalence/benchmark
   baseline (`benchmarks/sim_bench.py` measures batched speedup against it).
 
-Communication accounting follows the paper: transmitted data ∝ δ
-(bits = rate·d·32, time = rate·β). Strict values/indices accounting is
-available via `count_index_bits=True`.
+Communication accounting charges the actual payload shape by default
+(`wire_accounting="payload"`): strict value/index bits plus the kept-count
+header compact (values, indices) payloads carry — the same wire format the
+pod-sync compact path ships (dist.collectives). Upload *time* still follows
+the paper model (time = rate·β, Eq. 5). `wire_accounting="strict"` drops
+the header (the pre-header layout, also reachable via the legacy
+`count_index_bits=True`); `wire_accounting="analytic"` restores the paper's
+rate·d·32 estimate.
 
 Resilience (repro.ft) is first-class in BOTH engines — failure-injected
 runs no longer fall back to the sequential path. A `FailureSchedule`
@@ -182,7 +187,9 @@ def _chunk_sizes(n: int, cap: int = _CHUNK_CAP) -> list[int]:
 
 
 # Compressors whose payload carries explicit indices → compact wire pull.
-_SPARSE_WIRE = ("topk", "topk_threshold", "randk")
+# Shared with the wire-bit accounting (compression.sparse_wire) so the
+# charged shape and the shipped shape agree.
+_SPARSE_WIRE = C.SPARSE_WIRE
 
 
 # ------------------------------------------------------------------ simulator
@@ -195,10 +202,13 @@ class AFLSimulator:
                  failure_schedule=None, channel=None, stragglers=None,
                  controller: FedLuckController | None = None,
                  sanitizer=None, count_index_bits: bool = False,
+                 wire_accounting: str = "payload",
                  strategy_kwargs: dict | None = None,
                  engine: str = "batched", prefetch: int = 0):
         if engine not in ("batched", "sequential"):
             raise ValueError(f"unknown engine {engine}")
+        if wire_accounting not in ("payload", "strict", "analytic"):
+            raise ValueError(f"unknown wire_accounting {wire_accounting!r}")
         self.task = task
         self.devices = {d.profile.device_id: d for d in devices}
         self.round_period = float(round_period)
@@ -216,11 +226,12 @@ class AFLSimulator:
         self._stragglers = list(stragglers or [])
         self.controller = controller
         self._crash_lost = 0
-        if controller is not None:
-            # a re-plan changes k mid-run; a prefetch thread would already
-            # hold stale-k stacked batches, so force synchronous stacking
-            prefetch = 0
+        # prefetch composes with mid-run re-plans: StackedLoader's queue
+        # holds individual per-step batches (k-agnostic), so a re-plan's
+        # set_k only changes how many are popped per round — no stale
+        # stacked rounds to flush (tested bitwise in test_simulator_batched)
         self.count_index_bits = count_index_bits
+        self._wire_mode = "strict" if count_index_bits else wire_accounting
         self.strategy_name = strategy
         self.rng = np.random.RandomState(seed)
         self.engine = engine
@@ -504,30 +515,34 @@ class AFLSimulator:
             return
         spec.plan = plan
         if self._batched:
-            old = self._stacked.pop(did, None)
-            if old is not None:
-                old.close()
-            from repro.data.pipeline import StackedLoader
-            self._stacked[did] = StackedLoader(self.loaders[did], plan.k, 0)
+            # the stacked loader's queue holds per-step batches, so the new
+            # k applies from the next round with no prefetched data wasted
+            self._stacked[did].set_k(plan.k)
             self._plan_buckets()
 
     def _schedule_upload(self, did: int, t: float
-                         ) -> tuple[float | None, float | None, int, bool]:
+                         ) -> tuple[float | None, float | None, int, bool,
+                                    bool | None]:
         """Host-side outcome of the cycle a device starts at time t:
-        `(arrive_time, restart_at, attempts, corrupt)`. `arrive_time` is
-        None when the upload never lands (crash mid-flight or channel gave
-        up after max retries) — then `restart_at` says when the device
-        begins a fresh cycle. Consumes only the channel's per-device RNG
-        stream, so it is computable at heap-pop time before any compute is
-        dispatched."""
+        `(arrive_time, restart_at, attempts, corrupt, ch_delivered)`.
+        `arrive_time` is None when the upload never lands (crash mid-flight
+        or channel gave up after max retries) — then `restart_at` says when
+        the device begins a fresh cycle. `ch_delivered` is the channel-level
+        outcome (None without a channel) — the payload-bit charge for
+        retransmitted/dropped attempts (`LossyChannel.charge_wire`) keys off
+        it once the payload size is known. Consumes only the channel's
+        per-device RNG stream, so it is computable at heap-pop time before
+        any compute is dispatched."""
         spec = self.devices[did]
         corrupt = False
+        ch_delivered = None
         if self.channel is not None:
             corrupt = self.channel.maybe_corrupt(did)
             compute_end = t + spec.plan.k * spec.profile.alpha \
                 * self._alpha_mult(did, t)
             arrive, attempts, give_up = self.channel.transmit(
                 did, compute_end, spec.rate * spec.profile.beta)
+            ch_delivered = arrive is not None
         else:
             arrive, attempts, give_up = t + self._cycle_span(did, t), 1, None
         in_flight_end = arrive if arrive is not None else give_up
@@ -535,10 +550,11 @@ class AFLSimulator:
             rec = self.failure_schedule.crash_recovery(did, t, in_flight_end)
             if rec is not None:   # an outage opened mid-flight: upload lost
                 self._crash_lost += 1
-                return None, max(rec, t + 1e-9), attempts, corrupt
+                return None, max(rec, t + 1e-9), attempts, corrupt, \
+                    ch_delivered
         if arrive is None:
-            return None, give_up, attempts, corrupt
-        return arrive, None, attempts, corrupt
+            return None, give_up, attempts, corrupt, ch_delivered
+        return arrive, None, attempts, corrupt, ch_delivered
 
     @staticmethod
     def _poison(update):
@@ -546,7 +562,7 @@ class AFLSimulator:
         Only an aggregation-side sanitizer keeps this out of the model."""
         if isinstance(update, SparseUpdate):
             return SparseUpdate(np.full_like(update.values, np.nan),
-                                update.indices, update.dim)
+                                update.indices, update.dim, update.kept)
         return np.full_like(np.asarray(update), np.nan)
 
     def fault_counters(self) -> dict:
@@ -568,7 +584,7 @@ class AFLSimulator:
     def _process_starts_batched(self, starts: list, push) -> None:
         """Run a drained batch of device cycles through bucketed vmap
         dispatches. `starts` is [(t, did, model_round, arrive, attempts,
-        corrupt)] in heap-pop order, with the upload outcome already
+        corrupt, ch_delivered)] in heap-pop order, with the upload outcome already
         resolved at drain time (`_schedule_upload`); arrivals are pushed
         back in that same order so heap tie-breaking (and the host RNG
         stream) match the sequential engine exactly. Lost cycles (crash or
@@ -582,7 +598,7 @@ class AFLSimulator:
         stacking of the next chunk overlaps device compute of the previous
         one), then pull the payloads."""
         order = []
-        for t, did, mr, arrive, attempts, corrupt in starts:
+        for t, did, mr, arrive, attempts, corrupt, ch_del in starts:
             stacked = self._stacked[did].next()
             seed = self.rng.randint(0, 2 ** 31 - 1)
             order.append((t, did, mr, stacked, seed))
@@ -606,10 +622,12 @@ class AFLSimulator:
         for rec in pending:
             self._collect_chunk(rec, results)
 
-        for t, did, mr, arrive, attempts, corrupt in starts:
+        for t, did, mr, arrive, attempts, corrupt, ch_del in starts:
+            update, bits = results[did]
+            if self.channel is not None and ch_del is not None:
+                self.channel.charge_wire(bits, attempts, ch_del)
             if arrive is None:
                 continue   # upload lost; compute ran, restart already queued
-            update, bits = results[did]
             if corrupt:
                 update = self._poison(update)
             push(arrive, "arrival", Arrival(did, update, mr, bits * attempts,
@@ -645,7 +663,13 @@ class AFLSimulator:
             vals, idxs = payload
             for i, it in enumerate(items):
                 did = it[1]
-                results[did] = (SparseUpdate(vals[i], idxs[i], self.dim),
+                # kept-count header of the compact wire format; exact-k
+                # compressors know it statically, threshold selection only
+                # on device (header still charged via _wire_bits)
+                kept = (C.num_keep(self.dim, self.devices[did].plan.delta)
+                        if bkey[1] in ("topk", "randk") else None)
+                results[did] = (SparseUpdate(vals[i], idxs[i], self.dim,
+                                             kept),
                                 self._wire_bits(did, bits_host[i]))
         else:
             dense = payload
@@ -654,8 +678,19 @@ class AFLSimulator:
                 results[did] = (dense[i], self._wire_bits(did, bits_host[i]))
 
     def _wire_bits(self, did: int, strict_bits) -> float:
-        return (float(strict_bits) if self.count_index_bits
-                else self.devices[did].rate * self.dim * 32.0)
+        """Bits charged for one upload. "payload" (default) charges the
+        compact wire shape — strict value/index bits plus the kept-count
+        header when the payload ships sparse (the static rule is identical
+        in both engines, so they stay bitwise-equal); "strict" drops the
+        header; "analytic" is the paper's rate·d·32 estimate."""
+        spec = self.devices[did]
+        if self._wire_mode == "analytic":
+            return spec.rate * self.dim * 32.0
+        bits = float(strict_bits)
+        if self._wire_mode == "payload" and C.sparse_wire(
+                spec.compressor, self.dim, spec.plan.delta):
+            bits += C.HEADER_BITS
+        return bits
 
     # ----------------------------------------------------------- device cycle
     def _device_compute(self, did: int) -> tuple[np.ndarray, Any]:
@@ -765,7 +800,7 @@ class AFLSimulator:
                                  "start", (did, self.model.round))
                         else:
                             self._maybe_replan(did, t)
-                            arrive, restart_at, attempts, corrupt = \
+                            arrive, restart_at, attempts, corrupt, ch_del = \
                                 self._schedule_upload(did, t)
                             if arrive is None:
                                 push(restart_at, "start",
@@ -774,7 +809,8 @@ class AFLSimulator:
                                 horizon = min(horizon, arrive)
                             seen.add(did)
                             starts.append(
-                                (t, did, mr, arrive, attempts, corrupt))
+                                (t, did, mr, arrive, attempts, corrupt,
+                                 ch_del))
                         if not (heap and heap[0][2] == "start"
                                 and heap[0][0] <= min(horizon, max_sim_time)
                                 and heap[0][3][0] not in seen):
@@ -792,17 +828,20 @@ class AFLSimulator:
                          (did, self.model.round))
                     continue
                 self._maybe_replan(did, t)
-                arrive, restart_at, attempts, corrupt = \
+                arrive, restart_at, attempts, corrupt, ch_del = \
                     self._schedule_upload(did, t)
                 update, strict_bits = self._device_compute(did)
+                per_upload = self._wire_bits(did, strict_bits)
+                if self.channel is not None and ch_del is not None:
+                    self.channel.charge_wire(per_upload, attempts, ch_del)
                 if arrive is None:  # crashed mid-flight / channel gave up
                     push(restart_at, "start", (did, self.model.round))
                 else:
                     if corrupt:
                         update = self._poison(update)
-                    bits = self._wire_bits(did, strict_bits) * attempts
                     push(arrive, "arrival",
-                         Arrival(did, update, mr, bits, arrive))
+                         Arrival(did, update, mr, per_upload * attempts,
+                                 arrive))
 
             elif kind == "arrival":
                 a: Arrival = payload

@@ -41,11 +41,14 @@ class StackedLoader:
 
     Each `next()` groups `k` consecutive loader batches into one host batch
     of shape [k, B, ...] — the layout `lax.scan`-based local rounds consume.
-    With `prefetch > 0` the next stacked batch is prepared ahead on a
-    background thread, overlapping host-side batching with device compute.
-    The batch *sequence* is identical to calling `loader.next()` k times per
-    round (single producer, same RNG order), so prefetching never changes
-    the data a run sees.
+    With `prefetch > 0` a background thread draws *individual* loader
+    batches ahead into a bounded queue and `next()` stacks `k` of them,
+    overlapping host-side batching with device compute. The queue holds
+    per-step batches, not stacked rounds, so draws are k-agnostic: a
+    mid-run `set_k` (controller re-plan) only changes how many are popped
+    per round, and the underlying draw sequence — hence every batch a run
+    sees — is bitwise identical to `prefetch=0`, re-plans included (the
+    single producer preserves the loader's RNG order).
     """
 
     def __init__(self, loader: DataLoader, k: int, prefetch: int = 1):
@@ -56,13 +59,24 @@ class StackedLoader:
         self._thread: threading.Thread | None = None
         self._stop = False
 
-    def _draw(self) -> dict:
-        batches = [self.loader.next() for _ in range(self.k)]
-        return {kk: np.stack([b[kk] for b in batches]) for kk in batches[0]}
+    def set_k(self, k: int) -> None:
+        """Adopt a new local-round length from the next `next()` on.
+        Prefetched per-step batches stay valid — nothing is flushed."""
+        self.k = int(k)
+
+    def _next_batch(self) -> dict:
+        if self._depth <= 0:
+            return self.loader.next()
+        if self._thread is None:
+            # depth is in units of stacked rounds at the initial k
+            self._q = queue.Queue(maxsize=max(2, self._depth * self.k))
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+        return self._q.get()
 
     def _worker(self) -> None:
         while not self._stop:
-            item = self._draw()
+            item = self.loader.next()
             while not self._stop:
                 try:
                     self._q.put(item, timeout=0.1)
@@ -71,13 +85,8 @@ class StackedLoader:
                     continue
 
     def next(self) -> dict:
-        if self._depth <= 0:
-            return self._draw()
-        if self._thread is None:
-            self._q = queue.Queue(maxsize=self._depth)
-            self._thread = threading.Thread(target=self._worker, daemon=True)
-            self._thread.start()
-        return self._q.get()
+        batches = [self._next_batch() for _ in range(self.k)]
+        return {kk: np.stack([b[kk] for b in batches]) for kk in batches[0]}
 
     def close(self) -> None:
         """Stop the prefetch thread (safe to call more than once)."""

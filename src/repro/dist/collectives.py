@@ -7,50 +7,116 @@ density δ and applies the server rule
     w  ←  w − η_g · mean_pods(kept)          (Eq. 6)
     r' =  (delta + r) − kept                 (error feedback)
 
-The wire format is δ-adaptive (DESIGN.md §4): below the density crossover
-the kept entries ship as a (values, indices) sparse all-gather; above it a
-dense ring all-reduce is cheaper and the compression only serves the EF
-contract. `make_pod_sync` picks the path at build time from the static
-rate — the sparse path thresholds per (pod, block) with `lax.top_k` (the
-layout the sharded all-gather needs: every in-pod chip owns whole blocks),
-the dense path reuses the exact global threshold pipeline from
-`repro.kernels.ops.topk_compress`.
+Wire format (compact path)
+--------------------------
+Below the density crossover the kept entries ship as a **compact
+fixed-budget block payload** instead of a dense zero-filled carrier. Per
+owned block of `blk` coordinates each chip emits
 
-`all_gather_bytes` / `density_crossover` are the analytic wire-cost model
-(benchmarks/kernel_bench.py plots the crossover).
+    values   f32[budget]   kept entries, front-packed in index order
+    indices  i32[budget]   shard-local flat coordinates of the values
+    count    i32           kept-count header (<= budget)
+
+with `budget = block_budget(blk, δ) = max(1, min(blk, round(δ·blk)))`.
+Every chip thresholds only the blocks it owns: one histogram threshold
+solve per shard (`kernels.ops.compact_shard_topk`) targeting
+`budget · n_owned_blocks` keeps, then the `compact_topk` Pallas kernel
+packs each block's survivors into the fixed budget. Padding slots carry
+(0.0, 0) — scatter-adding them is a no-op — so
+`zeros.at[indices].add(values)` reconstructs the selection exactly, and
+blocks whose survivors overflow the budget defer the excess to the next
+round through the EF residual (`residual' = acc − shipped`, bitwise). The
+collective is a `shard_map` all-gather of ONLY these payloads over the
+`pod` axis followed by a local scatter-accumulate: wire bytes scale with
+δ, not with d.
+
+Above the crossover a dense ring all-reduce is cheaper and the compression
+only serves the EF contract; that path keeps the exact global threshold
+pipeline (`kernels.ops.topk_compress`, vmapped over pods).
+
+`make_pod_sync(..., wire=...)` picks the path: "auto" dispatches at build
+time on `density_crossover`, "compact"/"dense" force one, and "reference"
+is the dense-carrier oracle of the compact selection semantics (same
+thresholds and budgets, GSPMD mean instead of the sparse gather) that the
+equivalence tests and the `podsync` benchmark gate diff against.
+
+`CompactWire` / `all_gather_bytes` / `density_crossover` are the wire-cost
+model. With `n_blocks` given, `all_gather_bytes` counts the actual compact
+payload — budget slots plus count headers — so the model and the kernel
+agree on the per-block budget by construction
+(benchmarks/kernel_bench.py sweeps the crossover into BENCH_podsync.json).
 """
 from __future__ import annotations
+
+import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops
+from repro.kernels import ops, ref
 
-VALUE_BYTES = 4   # fp32 payload
-INDEX_BYTES = 4   # int32 in-block offset
+VALUE_BYTES = 4    # fp32 payload
+INDEX_BYTES = 4    # int32 shard-local flat coordinate
+HEADER_BYTES = 4   # i32 kept-count per block
+
+
+def block_budget(blk: int, rate: float) -> int:
+    """Fixed per-block slot count of the compact wire format (also the EF
+    selection cap): max(1, min(blk, round(rate·blk))). Both the wire-cost
+    model and the kernel use this, so they agree by construction."""
+    return max(1, min(int(blk), int(round(rate * blk))))
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactWire:
+    """Payload shape of one shard's compact sync upload."""
+    n_blocks: int   # blocks this shard owns
+    blk: int        # coordinates per block
+    budget: int     # slots per block (block_budget)
+
+    @property
+    def dim(self) -> int:
+        return self.n_blocks * self.blk
+
+    def payload_bytes(self) -> int:
+        """Bytes one shard ships to one peer: values + indices + headers."""
+        return self.n_blocks * (self.budget * (VALUE_BYTES + INDEX_BYTES)
+                                + HEADER_BYTES)
+
+    def payload_bits(self) -> int:
+        return 8 * self.payload_bytes()
 
 
 def density_crossover(n_pods: int, *, value_bytes: int = VALUE_BYTES,
                       index_bytes: int = INDEX_BYTES) -> float:
-    """Density δ* where sparse all-gather bytes == dense ring all-reduce
-    bytes. Sparse ships (P−1)·δ·d·(val+idx) per device; the ring costs
-    2·(P−1)/P·d·val. With 4-byte values/indices δ* = 1/P."""
+    """Density δ* where compact all-gather bytes == dense ring all-reduce
+    bytes. Compact ships (P−1)·δ·d·(val+idx) per device (headers add a
+    constant ~HEADER_BYTES/blk per coordinate, negligible for blk ≫ 1);
+    the ring costs 2·(P−1)/P·d·val. With 4-byte values/indices δ* = 1/P."""
     return 2.0 * value_bytes / (n_pods * (value_bytes + index_bytes))
 
 
 def all_gather_bytes(dim: int, n_pods: int, rate: float, *,
-                     value_bytes: int = VALUE_BYTES,
+                     n_blocks: int = 1, value_bytes: int = VALUE_BYTES,
                      index_bytes: int = INDEX_BYTES) -> float:
-    """Per-device wire bytes of one Eq. 6 sync at density `rate` — the
-    cheaper of the sparse gather and the dense ring all-reduce."""
-    k = max(1.0, round(rate * dim))
-    sparse = (n_pods - 1) * k * (value_bytes + index_bytes)
+    """Per-device wire bytes of one Eq. 6 sync at density `rate` over `dim`
+    coordinates in `n_blocks` blocks — the cheaper of the compact gather
+    (actual payload: `block_budget` slots + count header per block) and the
+    dense ring all-reduce."""
+    if dim % n_blocks != 0:
+        raise ValueError(f"dim={dim} not divisible by n_blocks={n_blocks}")
+    blk = dim // n_blocks
+    budget = block_budget(blk, rate)
+    compact = (n_pods - 1) * n_blocks * (budget * (value_bytes + index_bytes)
+                                         + HEADER_BYTES)
     dense = 2.0 * (n_pods - 1) / n_pods * dim * value_bytes
-    return float(min(sparse, dense))
+    return float(min(compact, dense))
 
 
 def make_pod_sync(mesh, dim: int, *, rate: float, eta_g: float = 1.0,
-                  n_blocks: int):
+                  n_blocks: int, wire: str = "auto",
+                  interpret: bool | None = None):
     """Build sync(params, deltas, residuals) -> (new_params, new_residuals).
 
     params     [n_blocks, blk]            global model (flat, blocked)
@@ -60,39 +126,107 @@ def make_pod_sync(mesh, dim: int, *, rate: float, eta_g: float = 1.0,
     dim = n_blocks · blk; the blocked 2D layout shards n_blocks over the
     in-pod axes and the pod dim over `pod`, so the mean over pods lowers
     to the cross-pod collective.
+
+    wire: "auto" picks "compact" below `density_crossover` and "dense"
+    above; "reference" is the dense-carrier oracle of the compact
+    selection (tests / bench gate). The returned fn carries `.path` (the
+    resolved wire mode), `.wire` (the per-shard `CompactWire`, None on the
+    dense path), `.bytes_per_device` (wire-cost model for one sync), and
+    `.payload_bits_per_pod` (bits one pod's whole update occupies on the
+    wire — what `dist.steps.make_pod_round_step` charges).
     """
     n_pods = int(mesh.shape["pod"]) if "pod" in mesh.shape else 1
     if dim % n_blocks != 0:
         raise ValueError(f"dim={dim} not divisible by n_blocks={n_blocks}")
     blk = dim // n_blocks
-    sparse = rate < density_crossover(max(n_pods, 2))
+    inpod = tuple(a for a in mesh.axis_names if a != "pod")
+    n_shards = int(math.prod(mesh.shape[a] for a in inpod)) if inpod else 1
+    has_pod = "pod" in mesh.shape
+    if wire == "auto":
+        wire = ("compact" if rate < density_crossover(max(n_pods, 2))
+                else "dense")
+    if wire not in ("compact", "dense", "reference"):
+        raise ValueError(f"unknown wire mode {wire!r}")
 
-    def compress_sparse(acc):
-        # per-(pod, block) budget: every chip thresholds the blocks it owns
-        # locally — no cross-chip threshold traffic, bounded deferral of
-        # over-budget blocks' entries to the next round via EF.
-        kb = max(1, min(blk, round(rate * blk)))
-        mags = jnp.abs(acc)
-        thr = jax.lax.top_k(mags, kb)[0][..., -1:]
-        return jnp.where(mags >= thr, acc, 0.0)
+    budget = block_budget(blk, rate)
+    if wire in ("compact", "reference"):
+        if n_blocks % n_shards != 0:
+            raise ValueError(f"n_blocks={n_blocks} not divisible by the "
+                             f"in-pod shard count {n_shards}")
+        nbl = n_blocks // n_shards      # blocks each chip owns
+        k_shard = nbl * budget          # shard threshold target
+        wire_fmt = CompactWire(nbl, blk, budget)
+    else:
+        wire_fmt = None
 
-    def compress_dense(acc_p, res_p):
-        # exact global threshold via the Pallas histogram pipeline
-        out, _, _, _ = ops.topk_compress(
-            (acc_p - res_p).reshape(dim), res_p.reshape(dim), rate=rate)
-        return out.reshape(n_blocks, blk)
+    if wire == "compact":
+        inpod_entry = inpod if inpod else None
+        pspec = jax.sharding.PartitionSpec(inpod_entry, None)
+        dspec = jax.sharding.PartitionSpec("pod" if has_pod else None,
+                                           inpod_entry, None)
 
-    def sync(params, deltas, residuals):
-        acc = deltas.astype(jnp.float32) + residuals.astype(jnp.float32)
-        if sparse:
-            kept = compress_sparse(acc)
-        else:
-            kept = jnp.stack([
-                compress_dense(acc[p], residuals[p].astype(jnp.float32))
-                for p in range(max(n_pods, 1))])
-        new_residuals = acc - kept
-        update = jnp.mean(kept, axis=0)          # Eq. 6 cross-pod reduce
-        new_params = params - eta_g * update
-        return new_params, new_residuals
+        def shard_fn(p_l, d_l, r_l):
+            acc = d_l[0].astype(jnp.float32) + r_l[0].astype(jnp.float32)
+            vals, idx, _, res = ops.compact_shard_topk(
+                acc, budget=budget, interpret=interpret)
+            if has_pod:
+                vals = jax.lax.all_gather(vals, "pod")   # [P, nbl, budget]
+                idx = jax.lax.all_gather(idx, "pod")
+            else:
+                vals, idx = vals[None], idx[None]
+            upd = jnp.zeros((acc.size,), jnp.float32).at[
+                idx.reshape(-1)].add(vals.reshape(-1)) / n_pods
+            return (p_l - eta_g * upd.reshape(acc.shape)).astype(p_l.dtype), \
+                res[None].astype(r_l.dtype)
 
+        mapped = jax.shard_map(shard_fn, mesh=mesh,
+                               in_specs=(pspec, dspec, dspec),
+                               out_specs=(pspec, dspec), check_vma=False)
+
+        def sync(params, deltas, residuals):
+            return mapped(params, deltas, residuals)
+
+    elif wire == "reference":
+        def sync(params, deltas, residuals):
+            acc = deltas.astype(jnp.float32) + residuals.astype(jnp.float32)
+            accs = acc.reshape(n_pods, n_shards, nbl, blk)
+
+            def one_shard(a):
+                t = ops.solve_threshold(a.reshape(-1), k_shard,
+                                        interpret=interpret)
+                _, _, _, res = ref.ref_compact_blocks(a, t, budget)
+                return a - res   # shipped selection, dense carrier
+
+            kept = jax.vmap(jax.vmap(one_shard))(accs) \
+                .reshape(n_pods, n_blocks, blk)
+            new_residuals = acc - kept
+            update = jnp.mean(kept, axis=0)          # Eq. 6 reduce
+            return params - eta_g * update, new_residuals
+
+    else:  # dense ring: exact global threshold, dense GSPMD mean
+        def compress_dense(acc_p, res_p):
+            kw = {} if interpret is None else {"interpret": interpret}
+            out, _, _, _ = ops.topk_compress(
+                (acc_p - res_p).reshape(dim), res_p.reshape(dim), rate=rate,
+                **kw)
+            return out.reshape(n_blocks, blk)
+
+        def sync(params, deltas, residuals):
+            acc = deltas.astype(jnp.float32) + residuals.astype(jnp.float32)
+            kept = jax.vmap(compress_dense)(acc, residuals.astype(jnp.float32))
+            new_residuals = acc - kept
+            update = jnp.mean(kept, axis=0)          # Eq. 6 cross-pod reduce
+            return params - eta_g * update, new_residuals
+
+    sync.path = wire
+    sync.wire = wire_fmt
+    if wire_fmt is not None:
+        sync.bytes_per_device = float(
+            (max(n_pods, 1) - 1) * wire_fmt.payload_bytes())
+        sync.payload_bits_per_pod = float(n_shards * wire_fmt.payload_bits())
+    else:
+        dim_local = dim // n_shards
+        sync.bytes_per_device = \
+            2.0 * (n_pods - 1) / max(n_pods, 1) * dim_local * VALUE_BYTES
+        sync.payload_bits_per_pod = float(dim) * 8.0 * VALUE_BYTES
     return sync

@@ -7,8 +7,10 @@ unreliable channel. Three independent fault axes compose:
     `loss_prob` (a float, or a `{device_id: p}` dict for per-device
     links). The sender detects the loss after `RetryPolicy.timeout`
     seconds (exponential backoff per retry) and retransmits; every
-    attempt is charged full upload time *and* full wire bits, so the
-    paper's Eq. 5 communication accounting stays honest under retries.
+    attempt is charged full upload time *and* full payload-shape wire
+    bits, so the paper's Eq. 5 communication accounting stays honest
+    under retries (`charge_wire` splits the overhead into `retx_bits`
+    and `lost_bits` counters once the simulator knows the payload size).
     After `max_attempts` transmissions the update is dropped and the
     device gives up (it restarts a fresh local round on the current
     model).
@@ -76,7 +78,8 @@ class LossyChannel:
         """Re-arm the per-device RNG streams and zero the counters."""
         self._streams: dict[int, np.random.RandomState] = {}
         self.counters = {"attempts": 0, "retries": 0, "delivered": 0,
-                         "channel_dropped": 0, "corrupted": 0}
+                         "channel_dropped": 0, "corrupted": 0,
+                         "retx_bits": 0.0, "lost_bits": 0.0}
 
     # ------------------------------------------------------------- internals
     def _stream(self, device_id: int) -> np.random.RandomState:
@@ -138,3 +141,19 @@ class LossyChannel:
             s = s + dur + self.retry.wait(i)
         self.counters["channel_dropped"] += 1
         return None, self.retry.max_attempts, s
+
+    def charge_wire(self, bits: float, attempts: int, delivered: bool
+                    ) -> None:
+        """Payload-shape wire accounting for one upload's transmissions.
+
+        `transmit` resolves the retry schedule before the payload exists
+        (it consumes only RNG streams); the simulator calls this once the
+        payload size is known. Delivered uploads charge the retransmitted
+        copies (attempts beyond the first) to `retx_bits`; uploads the
+        channel dropped after max retries charge every attempt to
+        `lost_bits`. Both engines call it at the same points, so the
+        counters stay engine-identical."""
+        if delivered:
+            self.counters["retx_bits"] += float(bits) * (attempts - 1)
+        else:
+            self.counters["lost_bits"] += float(bits) * attempts

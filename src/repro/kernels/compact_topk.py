@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: fixed-budget block compaction (compact wire format).
+
+Given a blocked EF accumulator [n_blocks, blk] and a threshold t (from the
+magnitude-histogram pipeline), each grid step packs one block's survivors
+(|acc| >= t, in index order) into a fixed `budget` of slots and emits the
+pod-sync wire payload:
+
+    values   f32[n_blocks, budget]   front-packed kept entries
+    indices  i32[n_blocks, budget]   shard-local flat coordinates
+    counts   i32[n_blocks, 1]        kept-count header (<= budget)
+    residual f32[n_blocks, blk]      acc − shipped (EF carry, bitwise)
+
+Padding slots carry (0.0, 0) so a scatter-add of the full payload onto
+zeros reconstructs the shipped selection exactly. Blocks with more
+survivors than `budget` truncate in index order; the overflow stays in the
+residual and ships next round (bounded deferral — the same EF contract the
+threshold pipeline already relies on).
+
+The pack is sort-free: a cumulative-sum over the keep mask assigns each
+survivor its output slot, a one-hot [blk, budget] matrix built from that
+position lowers the gather to one MXU `dot_general` for the values (each
+output slot is a sum of exactly one survivor and zeros — bitwise exact)
+and an int32 multiply-sum for the indices (int32 stays exact where an fp32
+matmul would round coordinates above 2^24).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compact_kernel(acc_ref, t_ref, vals_ref, idx_ref, cnt_ref, res_ref, *,
+                    budget: int):
+    i = pl.program_id(0)
+    acc = acc_ref[...].astype(jnp.float32)        # [1, blk]
+    blk = acc.shape[-1]
+    t = t_ref[0, 0]
+    keep = (jnp.abs(acc) >= t).astype(jnp.float32)
+    pos = jnp.cumsum(keep, axis=-1) - keep        # output slot per survivor
+    in_budget = keep * (pos < budget)
+    onehot = in_budget.reshape(blk, 1) * (
+        pos.reshape(blk, 1)
+        == jax.lax.broadcasted_iota(jnp.float32, (blk, budget), 1))
+    vals_ref[...] = jax.lax.dot_general(
+        acc, onehot, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    gidx = i * blk + jax.lax.broadcasted_iota(jnp.int32, (blk, budget), 0)
+    idx_ref[...] = jnp.sum(onehot.astype(jnp.int32) * gidx, axis=0,
+                           keepdims=True)
+    cnt_ref[...] = jnp.sum(in_budget).astype(jnp.int32).reshape(1, 1)
+    shipped = acc * in_budget
+    res_ref[...] = (acc - shipped).astype(res_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("budget", "interpret"))
+def compact_blocks(acc: jax.Array, threshold: jax.Array, *, budget: int,
+                   interpret: bool = False):
+    """Returns (values, indices, counts, residual) for acc [n_blocks, blk].
+
+    `indices` are shard-local flat coordinates (block index · blk + offset),
+    so `zeros(acc.size).at[indices.ravel()].add(values.ravel())` equals the
+    shipped selection `acc − residual` exactly.
+    """
+    n_blocks, blk = acc.shape
+    if not 1 <= budget <= blk:
+        raise ValueError(f"budget={budget} outside [1, blk={blk}]")
+    t2 = jnp.asarray(threshold, jnp.float32).reshape(1, 1)
+
+    vals, idx, cnt, res = pl.pallas_call(
+        functools.partial(_compact_kernel, budget=budget),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, blk), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, budget), lambda i: (i, 0)),
+            pl.BlockSpec((1, budget), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, blk), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, budget), jnp.float32),
+            jax.ShapeDtypeStruct((n_blocks, budget), jnp.int32),
+            jax.ShapeDtypeStruct((n_blocks, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n_blocks, blk), jnp.float32),
+        ],
+        interpret=interpret,
+    )(acc.astype(jnp.float32), t2)
+    return vals, idx, cnt[:, 0], res

@@ -18,6 +18,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.compact_topk import compact_blocks
 from repro.kernels.ef_topk import ef_topk
 from repro.kernels.fused_momentum import fused_momentum
 from repro.kernels.magnitude_hist import magnitude_hist
@@ -38,6 +39,37 @@ def _solve_threshold(counts_ge: jax.Array, edges: jax.Array, k) -> tuple:
 
 
 @functools.partial(jax.jit,
+                   static_argnames=("coarse_buckets", "fine_buckets",
+                                    "block", "interpret"))
+def solve_threshold(acc: jax.Array, k, *, coarse_buckets: int = 48,
+                    fine_buckets: int = 128, block: int = 8 * 1024,
+                    interpret: bool | None = None) -> jax.Array:
+    """Histogram-pipeline threshold t with #{|acc| >= t} ≈ k (passes 0–2 of
+    the top-k pipeline; `k` may be traced). Shared by `topk_compress` and
+    the pod-sync compact path, so both select against identical thresholds.
+    """
+    if interpret is None:
+        interpret = INTERPRET
+    gmax = jnp.max(jnp.abs(acc)) + 1e-30
+
+    # pass 1: coarse log2 buckets
+    coarse_edges = gmax * 2.0 ** (-jnp.arange(coarse_buckets + 1,
+                                              dtype=jnp.float32))
+    c_counts = magnitude_hist(acc, coarse_edges, block=block,
+                              interpret=interpret)
+    lo, hi = _solve_threshold(c_counts, coarse_edges, k)
+
+    # pass 2: fine linear buckets inside [lo, hi]
+    frac = jnp.arange(fine_buckets + 1, dtype=jnp.float32) / fine_buckets
+    fine_edges = hi - (hi - lo) * frac         # descending hi -> lo
+    fine_edges = jnp.maximum(fine_edges, 1e-30)
+    f_counts = magnitude_hist(acc, fine_edges, block=block,
+                              interpret=interpret)
+    _, t = _solve_threshold(f_counts, fine_edges, k)
+    return t
+
+
+@functools.partial(jax.jit,
                    static_argnames=("rate", "coarse_buckets", "fine_buckets",
                                     "block", "interpret"))
 def topk_compress(g: jax.Array, residual: jax.Array, *, rate: float,
@@ -53,26 +85,12 @@ def topk_compress(g: jax.Array, residual: jax.Array, *, rate: float,
         interpret = INTERPRET
     d = g.shape[0]
     k = max(1, min(d, int(round(rate * d))))
-    acc_stat_src = g.astype(jnp.float32) + residual.astype(jnp.float32)
     # NOTE: threshold statistics must be over the EF accumulator, since
     # pass 3 selects on |g + residual|.
-    gmax = jnp.max(jnp.abs(acc_stat_src)) + 1e-30
-
-    # pass 1: coarse log2 buckets
-    coarse_edges = gmax * 2.0 ** (-jnp.arange(coarse_buckets + 1,
-                                              dtype=jnp.float32))
-    c_counts = magnitude_hist(acc_stat_src, coarse_edges, block=block,
-                              interpret=interpret)
-    lo, hi = _solve_threshold(c_counts, coarse_edges, k)
-
-    # pass 2: fine linear buckets inside [lo, hi]
-    frac = jnp.arange(fine_buckets + 1, dtype=jnp.float32) / fine_buckets
-    fine_edges = hi - (hi - lo) * frac         # descending hi -> lo
-    fine_edges = jnp.maximum(fine_edges, 1e-30)
-    f_counts = magnitude_hist(acc_stat_src, fine_edges, block=block,
-                              interpret=interpret)
-    _, t = _solve_threshold(f_counts, fine_edges, k)
-
+    acc_stat_src = g.astype(jnp.float32) + residual.astype(jnp.float32)
+    t = solve_threshold(acc_stat_src, k, coarse_buckets=coarse_buckets,
+                        fine_buckets=fine_buckets, block=block,
+                        interpret=interpret)
     out, new_res, nnz = ef_topk(g, residual, t, block=block,
                                 interpret=interpret)
     return out, new_res, nnz, t
@@ -116,6 +134,31 @@ def topk_compress_sparse(g: jax.Array, residual: jax.Array, *, rate: float,
     k_cap = min(d, int(k * slack) + 8)
     vals, idx = compact_topk(out, k_cap)
     return vals, idx, new_res, nnz, t
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("budget", "coarse_buckets",
+                                    "fine_buckets", "block", "interpret"))
+def compact_shard_topk(acc: jax.Array, *, budget: int,
+                       coarse_buckets: int = 48, fine_buckets: int = 128,
+                       block: int = 8 * 1024, interpret: bool | None = None):
+    """Per-shard compact top-k over a blocked EF accumulator [nb, blk].
+
+    Runs the histogram threshold pipeline over the whole shard targeting
+    `nb · budget` keeps, then packs each block's survivors into `budget`
+    fixed slots (compact_topk kernel). Returns (values [nb, budget],
+    indices [nb, budget] i32 shard-local flat, counts [nb] i32 header,
+    residual [nb, blk]) — the pod-sync wire payload plus the EF carry.
+    """
+    if interpret is None:
+        interpret = INTERPRET
+    nb, blk = acc.shape
+    acc = acc.astype(jnp.float32)
+    t = solve_threshold(acc.reshape(-1), nb * budget,
+                        coarse_buckets=coarse_buckets,
+                        fine_buckets=fine_buckets, block=block,
+                        interpret=interpret)
+    return compact_blocks(acc, t, budget=budget, interpret=interpret)
 
 
 @functools.partial(jax.jit,

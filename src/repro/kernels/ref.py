@@ -39,3 +39,29 @@ def ref_threshold_from_hist(counts_ge: jax.Array, edges: jax.Array,
     """Smallest edge whose >=-count reaches k (edges descending)."""
     sel = jnp.argmax(counts_ge >= k)
     return edges[sel]
+
+
+def ref_compact_blocks(acc: jax.Array, threshold, budget: int) -> tuple:
+    """Oracle for kernels.compact_topk.compact_blocks: per-block fixed-budget
+    front-pack of the |acc| >= t survivors in index order, shard-local flat
+    indices, kept-count header, and the bitwise EF residual."""
+    acc = acc.astype(jnp.float32)
+    n_blocks, blk = acc.shape
+    keep = jnp.abs(acc) >= jnp.asarray(threshold, jnp.float32)
+    kf = keep.astype(jnp.float32)
+    pos = jnp.cumsum(kf, axis=1) - kf
+    in_budget = keep & (pos < budget)
+    shipped = jnp.where(in_budget, acc, 0.0)
+    cnt = jnp.sum(in_budget, axis=1).astype(jnp.int32)
+    # stable pack: kept entries sort to the front by their slot position,
+    # dropped entries by a unique key past every slot
+    offs = jnp.arange(blk, dtype=jnp.float32)[None, :]
+    key = jnp.where(in_budget, pos, blk + offs)
+    order = jnp.argsort(key, axis=1)[:, :budget]
+    slot_live = jnp.arange(budget, dtype=jnp.int32)[None, :] < cnt[:, None]
+    vals = jnp.where(slot_live,
+                     jnp.take_along_axis(acc, order, axis=1), 0.0)
+    gidx = order.astype(jnp.int32) \
+        + (jnp.arange(n_blocks, dtype=jnp.int32) * blk)[:, None]
+    idx = jnp.where(slot_live, gidx, 0)
+    return vals, idx, cnt, acc - shipped

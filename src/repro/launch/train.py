@@ -220,7 +220,9 @@ def run_datacenter(args) -> dict:
                 C.make_compressor("topk", rate), np.asarray(flat_d),
                 residuals[i])
             deltas.append(np.asarray(comp.dense()))
-            comm_bits += float(comp.wire_bits)
+            # payload-shape accounting: value/index bits + kept-count
+            # header, matching the compact pod-sync wire format
+            comm_bits += float(C.payload_bits(comp))
             opt_states[i] = o1
             losses.append(float(loss))
         # Eq. 6 aggregation (the sparse all-reduce in the real deployment)

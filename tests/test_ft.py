@@ -107,7 +107,17 @@ class TestLossyChannel:
         # every lost attempt waits: 0.25 + 0.5 + 1.0 after the 3rd
         assert give_up == pytest.approx(3.0 + 0.25 + 0.5 + 1.0)
         assert ch.counters == {"attempts": 3, "retries": 2, "delivered": 0,
-                               "channel_dropped": 1, "corrupted": 0}
+                               "channel_dropped": 1, "corrupted": 0,
+                               "retx_bits": 0.0, "lost_bits": 0.0}
+
+    def test_charge_wire_retx_and_lost_accounting(self):
+        ch = LossyChannel(loss_prob=0.0)
+        ch.charge_wire(100.0, attempts=3, delivered=True)   # 2 retransmits
+        assert ch.counters["retx_bits"] == 200.0
+        assert ch.counters["lost_bits"] == 0.0
+        ch.charge_wire(100.0, attempts=2, delivered=False)  # dropped upload
+        assert ch.counters["lost_bits"] == 200.0           # every attempt lost
+        assert ch.counters["retx_bits"] == 200.0
 
     def test_per_device_streams_independent_of_interleaving(self):
         """Outcomes for a device depend only on its own draw order — the
@@ -158,8 +168,10 @@ class TestSimulatorUnderFailures:
         sim = AFLSimulator(task, specs, "periodic", round_period=1.0,
                            seed=0, failure_schedule=fs)
         sim.run(total_rounds=6, eval_every=0)
-        # only device 1's uploads were ever aggregated
-        per_upload = specs[1].rate * sim.dim * 32
+        # only device 1's uploads were ever aggregated (payload-shape
+        # accounting: k values + k indices + kept-count header)
+        from repro.core import compression as C
+        per_upload = C.num_keep(sim.dim, specs[1].rate) * 64 + C.HEADER_BITS
         assert sim.agg.total_bits % per_upload == 0
 
 

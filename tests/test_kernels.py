@@ -121,6 +121,84 @@ class TestTopkCompressPipeline:
         assert float(nnz) > 0
 
 
+class TestCompactBlocks:
+    """compact_topk.compact_blocks — the pod-sync wire-format kernel."""
+
+    def _acc(self, nb, blk, seed=0):
+        rng = np.random.RandomState(seed)
+        return jnp.asarray(rng.randn(nb, blk).astype(np.float32)
+                           * np.exp(rng.randn(nb, blk).astype(np.float32)))
+
+    @pytest.mark.parametrize("nb,blk", [(1, 128), (8, 64), (12, 256)])
+    @pytest.mark.parametrize("budget", [1, 5, 32])
+    def test_vs_oracle_bitwise(self, nb, blk, budget):
+        from repro.kernels.compact_topk import compact_blocks
+        acc = self._acc(nb, blk, nb * blk + budget)
+        t = jnp.float32(np.median(np.abs(np.asarray(acc))) * 2)
+        got = compact_blocks(acc, t, budget=budget, interpret=True)
+        want = ref.ref_compact_blocks(acc, t, budget)
+        for g_, w_, name in zip(got, want, ("vals", "idx", "cnt", "res")):
+            np.testing.assert_array_equal(np.asarray(g_), np.asarray(w_),
+                                          err_msg=name)
+
+    @pytest.mark.parametrize("threshold,expect", [(0.0, "all"),
+                                                  (np.inf, "none")])
+    def test_degenerate_thresholds(self, threshold, expect):
+        from repro.kernels.compact_topk import compact_blocks
+        nb, blk, budget = 4, 64, 8
+        acc = self._acc(nb, blk, 3)
+        vals, idx, cnt, res = compact_blocks(acc, jnp.float32(threshold),
+                                             budget=budget, interpret=True)
+        if expect == "none":   # t=inf: nothing ships, residual == acc
+            assert (np.asarray(cnt) == 0).all()
+            np.testing.assert_array_equal(np.asarray(res), np.asarray(acc))
+            assert not np.asarray(vals).any() and not np.asarray(idx).any()
+        else:                  # t=0: every block overflows to exactly budget
+            assert (np.asarray(cnt) == budget).all()
+            # kept entries are the FIRST `budget` coords of each block
+            # (front-packed in index order), rest defer via residual
+            np.testing.assert_array_equal(
+                np.asarray(vals), np.asarray(acc)[:, :budget])
+
+    def test_scatter_reconstructs_shipped_selection(self):
+        """zeros.at[idx].add(vals) == acc − residual (padding slots are
+        (0.0, 0) no-ops) — the property the compact pod-sync relies on."""
+        from repro.kernels.compact_topk import compact_blocks
+        nb, blk, budget = 8, 128, 6
+        acc = self._acc(nb, blk, 17)
+        t = jnp.float32(np.quantile(np.abs(np.asarray(acc)), 0.95))
+        vals, idx, cnt, res = compact_blocks(acc, t, budget=budget,
+                                             interpret=True)
+        rebuilt = np.zeros(nb * blk, np.float32)
+        np.add.at(rebuilt, np.asarray(idx).ravel(), np.asarray(vals).ravel())
+        np.testing.assert_array_equal(rebuilt.reshape(nb, blk),
+                                      np.asarray(acc - res))
+        # indices are shard-flat (block i owns [i·blk, (i+1)·blk))
+        live = np.arange(budget)[None, :] < np.asarray(cnt)[:, None]
+        blocks = np.asarray(idx) // blk
+        assert (blocks[live] == np.nonzero(live)[0]).all()
+
+    def test_shard_pipeline_matches_threshold_solve(self):
+        """compact_shard_topk == solve_threshold + compact_blocks, and the
+        shard threshold equals topk_compress's on the same flat vector."""
+        nb, blk, rate = 8, 256, 0.0625   # rate·blk integral, so the shard
+        budget = max(1, min(blk, round(rate * blk)))   # target nb·budget
+        assert nb * budget == round(rate * nb * blk)   # == pipeline k
+        acc = self._acc(nb, blk, 29)
+        vals, idx, cnt, res = ops.compact_shard_topk(acc, budget=budget,
+                                                     interpret=True)
+        t = ops.solve_threshold(acc.reshape(-1), nb * budget, interpret=True)
+        want = ref.ref_compact_blocks(acc, t, budget)
+        for g_, w_, name in zip((vals, idx, cnt, res), want,
+                                ("vals", "idx", "cnt", "res")):
+            np.testing.assert_array_equal(np.asarray(g_), np.asarray(w_),
+                                          err_msg=name)
+        # solve_threshold is the extracted topk_compress solver: same t
+        _, _, _, t_pipe = ops.topk_compress(
+            acc.reshape(-1), jnp.zeros(nb * blk), rate=rate, interpret=True)
+        assert float(t) == float(t_pipe)
+
+
 class TestFusedMomentum:
     @pytest.mark.parametrize("d", SHAPES)
     @pytest.mark.parametrize("dtype", DTYPES)

@@ -47,17 +47,31 @@ class TestSimulation:
         assert h.records[-1].gbits > 0
 
     def test_time_and_bits_accounting(self, task):
-        """Comm bits follow the paper model: rate · d · 32 per upload."""
+        """Default accounting charges the actual payload shape — k values +
+        k indices + the kept-count header per upload (the compact wire
+        format); wire_accounting="analytic" restores the paper's rate·d·32
+        estimate."""
+        from repro.core import compression as C
         profs = _profiles(2)
         plan = Plan(3, 0.125, 0.0, 1.0, 1)
         specs = [DeviceSpec(p, plan, "topk") for p in profs]
         sim = AFLSimulator(task, specs, "periodic", round_period=10.0,
                            seed=0)
-        h = sim.run(total_rounds=1, eval_every=1)
+        sim.run(total_rounds=1, eval_every=1)
         d = sim.dim
-        per_upload = 0.125 * d * 32
+        per_upload = C.num_keep(d, 0.125) * 64 + C.HEADER_BITS
         total = sim.agg.total_bits
         assert total > 0 and total % per_upload == 0
+        sim.close()
+
+        sim2 = AFLSimulator(task, [DeviceSpec(p, plan, "topk")
+                                   for p in _profiles(2)],
+                            "periodic", round_period=10.0, seed=0,
+                            wire_accounting="analytic")
+        sim2.run(total_rounds=1, eval_every=1)
+        total2 = sim2.agg.total_bits
+        assert total2 > 0 and total2 % (0.125 * d * 32) == 0
+        sim2.close()
 
     def test_staleness_matches_ceil_formula(self, task):
         """τ = ceil(d_i / T̃) for a device slower than the round period."""

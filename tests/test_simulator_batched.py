@@ -102,7 +102,8 @@ class TestChunking:
 
 
 def _fault_run(task, engine, *, rounds=8, strategy="periodic",
-               channel=False, sanitizer=False, controller=False):
+               channel=False, sanitizer=False, controller=False,
+               prefetch=0):
     """Run a failure-injected mixed fleet; fresh stateful fault models per
     call so batched/sequential consume identical RNG streams."""
     from repro.core.aggregation import SanitizerConfig
@@ -124,7 +125,7 @@ def _fault_run(task, engine, *, rounds=8, strategy="periodic",
         kwargs["controller"] = FedLuckController(1.0, (1, 8), (0.05, 1.0))
         kwargs["stragglers"] = [StragglerDrift(2, 3.0, 4.0)]
     sim = AFLSimulator(task, _mixed_fleet(), strategy, round_period=1.0,
-                       seed=3, engine=engine, **kwargs)
+                       seed=3, engine=engine, prefetch=prefetch, **kwargs)
     h = sim.run(total_rounds=rounds, eval_every=2)
     _, res = sim.residual_snapshot()
     out = {
@@ -176,6 +177,20 @@ class TestFaultEquivalence:
         assert np.array_equal(b["w"], s["w"])
         assert b["records"] == s["records"]
         assert b["counters"] == s["counters"]
+
+    def test_prefetch_bitwise_equal_across_replan(self, task):
+        """StackedLoader prefetch>0 must produce the SAME batch sequence as
+        the synchronous path — per-step-batch queueing makes the worker
+        k-agnostic, so a mid-run controller re-plan (set_k) re-stacks
+        without flushing and nothing diverges."""
+        base = _fault_run(task, "batched", controller=True)
+        pre = _fault_run(task, "batched", controller=True, prefetch=2)
+        assert base["counters"]["replans"] > 0   # a re-plan actually fired
+        assert np.array_equal(base["w"], pre["w"])
+        assert np.array_equal(base["res"], pre["res"])
+        assert base["bits"] == pre["bits"]
+        assert base["records"] == pre["records"]
+        assert base["counters"] == pre["counters"]
 
     def test_fedbuff_crash_bitwise_equal(self, task):
         b = _fault_run(task, "batched", strategy="fedbuff", rounds=5)
