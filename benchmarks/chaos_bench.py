@@ -25,6 +25,8 @@ import argparse
 import json
 import sys
 
+from repro.obs import log
+
 # fault intensity grid: per-attempt loss / corruption probability, mean
 # crash windows per device over the run, straggler α multiplier (device 0,
 # kicking in a third of the way through)
@@ -55,7 +57,7 @@ def _fault_kwargs(level: dict, num_devices: int, horizon: float, seed: int):
 
 
 def _build(method: str, engine: str, level: str, *, task, num_devices: int,
-           rounds: int, seed: int = 0):
+           rounds: int, seed: int = 0, tracer=None, metrics=None):
     import jax
     import numpy as np
 
@@ -81,13 +83,14 @@ def _build(method: str, engine: str, level: str, *, task, num_devices: int,
     return AFLSimulator(task, specs, STRATEGY_FOR_METHOD[method],
                         round_period=1.0, seed=seed, engine=engine,
                         controller=ctl, sanitizer=SanitizerConfig(tau_max=10),
-                        **kw)
+                        tracer=tracer, metrics=metrics, **kw)
 
 
 def run_cell(method: str, level: str, *, task, num_devices: int, rounds: int,
-             seed: int = 0, engine: str = "batched") -> dict:
+             seed: int = 0, engine: str = "batched", tracer=None,
+             metrics=None) -> dict:
     sim = _build(method, engine, level, task=task, num_devices=num_devices,
-                 rounds=rounds, seed=seed)
+                 rounds=rounds, seed=seed, tracer=tracer, metrics=metrics)
     h = sim.run(total_rounds=rounds, eval_every=max(1, rounds // 4))
     out = {
         "method": method,
@@ -120,7 +123,8 @@ def equivalence_gate(task, *, num_devices: int = 4, rounds: int = 4,
     return bool(np.array_equal(b[0], s[0])) and b[1] == s[1] and b[2] == s[2]
 
 
-def run_bench(smoke: bool = False, seed: int = 0) -> dict:
+def run_bench(smoke: bool = False, seed: int = 0, tracer=None,
+              metrics=None) -> dict:
     from repro.models.small import make_task
     task = make_task("mlp_micro", num_samples=2000, test_samples=200,
                      batch_size=32, seed=seed)
@@ -137,14 +141,20 @@ def run_bench(smoke: bool = False, seed: int = 0) -> dict:
         methods, levels = METHODS, list(FAULT_LEVELS)
     report["devices"], report["rounds"] = num_devices, rounds
     cells = []
+    first = True
     for method in methods:
         for level in levels:
-            print(f"[chaos_bench] {method} / {level} ...", flush=True)
-            cells.append(run_cell(method, level, task=task,
-                                  num_devices=num_devices, rounds=rounds,
-                                  seed=seed))
+            log.status(f"[chaos_bench] {method} / {level} ...")
+            # obs instrumentation attaches to the first cell only — one
+            # run per trace keeps the Perfetto timeline readable
+            cells.append(run_cell(
+                method, level, task=task, num_devices=num_devices,
+                rounds=rounds, seed=seed,
+                tracer=tracer if first else None,
+                metrics=metrics if first else None))
+            first = False
     report["cells"] = cells
-    print("[chaos_bench] engine equivalence gate ...", flush=True)
+    log.status("[chaos_bench] engine equivalence gate ...")
     report["equivalence_ok"] = equivalence_gate(task, seed=seed)
     return report
 
@@ -169,15 +179,40 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default="",
                     help="write the JSON report here (default: stdout only)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default="",
+                    help="write a Perfetto/Chrome trace of the first cell "
+                         "(open at ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the first cell's metrics snapshot JSON")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress status lines (JSON report still printed)")
     args = ap.parse_args(argv)
+    log.set_quiet(args.quiet)
 
-    report = run_bench(smoke=args.smoke, seed=args.seed)
+    tracer = metrics = None
+    if args.trace_out:
+        from repro.obs import Tracer
+        tracer = Tracer()
+    if args.metrics_out:
+        from repro.obs import MetricsRegistry
+        metrics = MetricsRegistry()
+
+    report = run_bench(smoke=args.smoke, seed=args.seed, tracer=tracer,
+                       metrics=metrics)
     text = json.dumps(report, indent=1)
     print(text)
     if args.out:
         with open(args.out, "w") as f:
             f.write(text + "\n")
-        print(f"[chaos_bench] wrote {args.out}")
+        log.status(f"[chaos_bench] wrote {args.out}")
+    if tracer is not None:
+        from repro.obs import PerfettoExporter
+        PerfettoExporter().export(tracer, args.trace_out)
+        log.status(f"[chaos_bench] wrote trace: {args.trace_out} "
+                   f"({len(tracer)} events)")
+    if metrics is not None:
+        metrics.to_json(args.metrics_out, extra={"bench": "chaos_bench"})
+        log.status(f"[chaos_bench] wrote metrics: {args.metrics_out}")
 
     if not report["equivalence_ok"]:
         print("[chaos_bench] FAIL: batched and sequential engines disagree "

@@ -32,6 +32,8 @@ import json
 import sys
 import time
 
+from repro.obs import log
+
 # plan-time k grid: collapses the number of distinct compiled local-round
 # shapes (the batched engine jits one vmapped cycle per (k, bucket) pair)
 K_GRID = [1, 2, 3, 4, 6, 8, 12, 16, 24, 30]
@@ -98,8 +100,8 @@ def _pair(num_devices: int, rounds: int, *, task, ef: bool = False,
     out = {"devices": num_devices, "rounds": rounds, "error_feedback": ef,
            "task": task.name}
     for eng in ("batched",) if skip_sequential else ("batched", "sequential"):
-        print(f"[sim_bench] task={task.name} devices={num_devices} "
-              f"rounds={rounds} ef={ef} {eng} ...", flush=True)
+        log.status(f"[sim_bench] task={task.name} devices={num_devices} "
+                   f"rounds={rounds} ef={ef} {eng} ...")
         out[eng] = measure(eng, num_devices, rounds, task=task,
                            error_feedback=ef, k_max=k_max,
                            base_alpha=base_alpha, warmup_rounds=warmup_rounds,
@@ -160,6 +162,123 @@ def smoke_rows():
     return rows
 
 
+def _obs_sim(engine: str, num_devices: int, *, task, seed: int,
+             tracer=None, metrics=None):
+    """Fault-injected instrumented simulator: a mildly lossy channel plus
+    crash windows and a sanitizer, so the exported trace/metrics carry
+    nonzero retry/drop/corruption activity."""
+    from repro.core import compression as C
+    from repro.core.aggregation import SanitizerConfig
+    from repro.core.simulator import (AFLSimulator, make_heterogeneous_devices,
+                                      plan_devices)
+    from repro.ft import FailureSchedule, LossyChannel
+    import jax
+    import numpy as np
+
+    params = task.init_fn(jax.random.PRNGKey(seed))
+    flat, _ = C.flatten_pytree(params)
+    model_bits = int(np.asarray(flat).size) * 32
+    profiles = make_heterogeneous_devices(num_devices, model_bits,
+                                          base_alpha=0.2, seed=seed)
+    specs = plan_devices(profiles, "fedluck", 1.0, k_bounds=(1, 30),
+                         k_grid=K_GRID)
+    return AFLSimulator(
+        task, specs, "periodic", round_period=1.0, seed=seed, engine=engine,
+        failure_schedule=FailureSchedule.random(
+            num_devices, 20.0, rate_per_device=0.5, mean_downtime=0.5,
+            seed=seed + 1),
+        channel=LossyChannel(loss_prob=0.25, corrupt_prob=0.05,
+                             seed=seed + 2),
+        sanitizer=SanitizerConfig(tau_max=16),
+        tracer=tracer, metrics=metrics)
+
+
+def run_obs(args) -> int:
+    """Instrumented dual-engine run behind --trace-out/--metrics-out.
+
+    Gates (any violation exits nonzero):
+      * batched and sequential emit IDENTICAL event sequences;
+      * engine-agnostic metric snapshots are identical;
+      * exported faults.* totals equal History.counters EXACTLY per engine;
+      * optional --overhead-gate: a NullTracer run (every call site
+        exercised, all no-ops) stays under gate x the default wall time.
+    """
+    from repro.models.small import make_task
+    from repro.obs import (MetricsRegistry, NullTracer, PerfettoExporter,
+                           Tracer)
+
+    rounds = 6 if args.smoke else 20
+    task = make_task("mlp_micro", num_samples=2000, test_samples=200,
+                     batch_size=32, seed=args.seed)
+    runs = {}
+    for eng in ("batched", "sequential"):
+        log.status(f"[sim_bench] obs run: {eng} devices={args.devices} "
+                   f"rounds={rounds} ...")
+        tracer, metrics = Tracer(), MetricsRegistry()
+        sim = _obs_sim(eng, args.devices, task=task, seed=args.seed,
+                       tracer=tracer, metrics=metrics)
+        hist = sim.run(total_rounds=rounds, eval_every=2)
+        sim.close()
+        snap = metrics.snapshot()
+        for k, v in hist.counters.items():
+            if snap["counters"].get(f"faults.{k}") != float(v):
+                print(f"[sim_bench] FAIL: {eng} faults.{k}="
+                      f"{snap['counters'].get(f'faults.{k}')} != "
+                      f"History.counters[{k!r}]={v}", file=sys.stderr)
+                return 1
+        runs[eng] = {"tracer": tracer, "metrics": metrics, "hist": hist}
+    b, s = runs["batched"], runs["sequential"]
+    if b["tracer"].events != s["tracer"].events:
+        print("[sim_bench] FAIL: engines emitted different event sequences",
+              file=sys.stderr)
+        return 1
+    if (b["metrics"].snapshot(engine_agnostic=True)
+            != s["metrics"].snapshot(engine_agnostic=True)):
+        print("[sim_bench] FAIL: engine-agnostic metrics differ",
+              file=sys.stderr)
+        return 1
+    if b["hist"].counters["retries"] == 0:
+        print("[sim_bench] FAIL: fault injection produced no retries",
+              file=sys.stderr)
+        return 1
+    if args.trace_out:
+        PerfettoExporter().export(b["tracer"], args.trace_out)
+        log.status(f"[sim_bench] wrote trace: {args.trace_out} "
+                   f"({len(b['tracer'])} events)")
+    if args.metrics_out:
+        doc = {"schema": "repro.obs.metrics/v1", "bench": "sim_bench_obs",
+               "devices": args.devices, "rounds": rounds,
+               "batched": b["metrics"].snapshot(),
+               "sequential": s["metrics"].snapshot()}
+        with open(args.metrics_out, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        log.status(f"[sim_bench] wrote metrics: {args.metrics_out}")
+
+    if args.overhead_gate > 0:
+        def wall(tracer):
+            best = float("inf")
+            for _ in range(3):
+                sim = _obs_sim("batched", args.devices, task=task,
+                               seed=args.seed, tracer=tracer)
+                t0 = time.perf_counter()
+                sim.run(total_rounds=rounds, eval_every=2)
+                best = min(best, time.perf_counter() - t0)
+                sim.close()
+            return best
+        plain = wall(None)          # default: guards skip every call site
+        null = wall(NullTracer())   # every call site runs, all no-ops
+        ratio = null / plain
+        log.status(f"[sim_bench] no-op tracer overhead: {ratio:.3f}x "
+                   f"(plain {plain:.3f}s, null {null:.3f}s, "
+                   f"gate {args.overhead_gate}x)")
+        if ratio > args.overhead_gate:
+            print(f"[sim_bench] FAIL: no-op tracer overhead {ratio:.3f}x "
+                  f"exceeds gate {args.overhead_gate}x", file=sys.stderr)
+            return 1
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -171,7 +290,21 @@ def main(argv=None) -> int:
                     help="StackedLoader prefetch depth for every fleet row "
                          "(bitwise-identical results; pays off with spare "
                          "cores)")
+    ap.add_argument("--trace-out", default="",
+                    help="run an instrumented fault-injected fleet and write "
+                         "a Perfetto/Chrome trace (open at ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write dual-engine metrics JSON from the "
+                         "instrumented run")
+    ap.add_argument("--overhead-gate", type=float, default=0.0,
+                    help="assert a NullTracer run stays under this multiple "
+                         "of the uninstrumented wall time (e.g. 1.05)")
+    ap.add_argument("--devices", type=int, default=10,
+                    help="fleet size for the instrumented obs run")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress status lines (JSON report still printed)")
     args = ap.parse_args(argv)
+    log.set_quiet(args.quiet)
 
     report = run_bench(smoke=args.smoke, seed=args.seed,
                        prefetch=args.prefetch)
@@ -180,7 +313,7 @@ def main(argv=None) -> int:
     if args.out:
         with open(args.out, "w") as f:
             f.write(text + "\n")
-        print(f"[sim_bench] wrote {args.out}")
+        log.status(f"[sim_bench] wrote {args.out}")
 
     # sanity gate so the CI smoke job fails loudly on a broken engine
     head = report["headline"]
@@ -191,6 +324,8 @@ def main(argv=None) -> int:
     if not ok:
         print("[sim_bench] FAIL: engines disagree", file=sys.stderr)
         return 1
+    if args.trace_out or args.metrics_out or args.overhead_gate > 0:
+        return run_obs(args)
     return 0
 
 

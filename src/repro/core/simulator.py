@@ -69,6 +69,7 @@ the baselines.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import heapq
 import math
@@ -87,6 +88,17 @@ from repro.core.aggregation import (Arrival, GlobalModel, PeriodicAggregator,
 from repro.core import factor
 from repro.core.controller import DeviceProfile, FedLuckController
 from repro.core.factor import Plan
+from repro.obs import profiling as _prof
+from repro.obs.metrics import STALENESS_BUCKETS
+from repro.obs.profiling import PhaseTimers
+from repro.obs.trace import CONTROLLER_TRACK, SERVER_TRACK, device_track
+
+# shared no-op phase context for the uninstrumented (timers=None) path
+_NULL_PHASE = contextlib.nullcontext()
+
+# fixed metric bucket grids (no Date/random in hot paths — pure constants)
+_SIZE_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+_DENSITY_BUCKETS = (0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0)
 
 
 # ----------------------------------------------------------------------- task
@@ -137,6 +149,12 @@ class Record:
     gbits: float
     mean_staleness: float
     drops: int = 0      # cumulative lost/dropped/sanitized updates so far
+    # per-eval-window fault deltas: {counter: change since the previous
+    # eval}, zero entries omitted — makes drops/retries/re-plans
+    # attributable to a window (`drops` above stays cumulative for
+    # back-compat). With metrics attached, also carries the window's
+    # staleness bucket counts under "staleness_counts".
+    window: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -204,7 +222,8 @@ class AFLSimulator:
                  sanitizer=None, count_index_bits: bool = False,
                  wire_accounting: str = "payload",
                  strategy_kwargs: dict | None = None,
-                 engine: str = "batched", prefetch: int = 0):
+                 engine: str = "batched", prefetch: int = 0,
+                 tracer=None, metrics=None, timers=None):
         if engine not in ("batched", "sequential"):
             raise ValueError(f"unknown engine {engine}")
         if wire_accounting not in ("payload", "strict", "analytic"):
@@ -226,6 +245,24 @@ class AFLSimulator:
         self._stragglers = list(stragglers or [])
         self.controller = controller
         self._crash_lost = 0
+        # ---- observability (repro.obs), all optional and host-side only:
+        # tracer: obs.Tracer recording spans/instants in SIMULATED time —
+        #     emission happens only at engine-shared seams, so batched and
+        #     sequential runs produce identical event lists
+        # metrics: obs.MetricsRegistry (counters/gauges/fixed-bucket
+        #     histograms; engine-specific internals live under engine.*)
+        # timers: obs.PhaseTimers perf_counter wall-clock phase totals
+        #     (defaults on whenever metrics are attached)
+        # The default (all None) path pays one `is not None` predicate per
+        # site and stays bitwise identical: instrumentation reads state but
+        # never consumes RNG or touches the event heap.
+        self._tracer = tracer
+        self._metrics = metrics
+        self._timers = timers if timers is not None else (
+            PhaseTimers() if metrics is not None else None)
+        self._last_counters: dict = {}
+        if tracer is not None and channel is not None:
+            channel.trace_attempts = True
         # prefetch composes with mid-run re-plans: StackedLoader's queue
         # holds individual per-step batches (k-agnostic), so a re-plan's
         # set_k only changes how many are popped per round — no stale
@@ -302,6 +339,55 @@ class AFLSimulator:
         for sl in self._stacked.values():
             sl.close()
 
+    # ---------------------------------------------------------- observability
+    def _phase(self, name: str):
+        """Wall-clock phase context (obs.PhaseTimers) or a shared no-op."""
+        tm = self._timers
+        return tm.phase(name) if tm is not None else _NULL_PHASE
+
+    def _trace_down(self, did: int, t: float, recovery: float) -> None:
+        """Device found down at cycle start: its outage window as a span."""
+        tr = self._tracer
+        if tr is not None:
+            tr.span(device_track(did), "down", t, recovery)
+        if self._metrics is not None:
+            self._metrics.counter("sim.down_starts").inc()
+
+    def _trace_agg_events(self, events) -> None:
+        tr, m = self._tracer, self._metrics
+        for ev in events:
+            if tr is not None:
+                tr.instant(SERVER_TRACK, "aggregate", ev.time,
+                           round=ev.new_round, released=len(ev.release_to))
+            if m is not None:
+                m.counter("sim.aggregations").inc()
+
+    def _trace_cycle(self, did: int, t: float, compute_end: float,
+                     arrive, restart_at, attempts: int, corrupt: bool,
+                     crashed: bool, give_up) -> None:
+        """Spans/instants for one device cycle resolved by
+        `_schedule_upload` — called at heap-pop time in BOTH engines, so
+        event order matches the sequential pop order exactly."""
+        tr = self._tracer
+        spec = self.devices[did]
+        track = device_track(did)
+        tr.span(track, "local_round", t, compute_end,
+                k=spec.plan.k, delta=spec.plan.delta)
+        if self.channel is not None and self.channel.trace_attempts:
+            for i, (s0, s1, lost) in enumerate(self.channel.last_attempts):
+                tr.span(track, "upload_retry" if i else "upload", s0, s1,
+                        attempt=i, lost=lost)
+        elif arrive is not None:
+            tr.span(track, "upload", compute_end, arrive)
+        if crashed:
+            end = arrive if arrive is not None else give_up
+            tr.instant(track, "crash_lost", min(end, restart_at),
+                       restart=restart_at)
+        elif arrive is None:
+            tr.instant(track, "channel_dropped", give_up, attempts=attempts)
+        elif corrupt:
+            tr.instant(track, "corrupted", arrive)
+
     # --------------------------------------------------------------- jit fns
     def _make_eval(self):
         loss_fn, acc_fn, spec = self.task.loss_fn, self.task.acc_fn, self.spec
@@ -340,6 +426,8 @@ class AFLSimulator:
                spec_d.error_feedback, spec_d._ckw_key())
         if key in self._compress_fns:
             return self._compress_fns[key]
+        if self._metrics is not None:
+            self._metrics.counter("engine.compressor_compiles").inc()
         comp = C.make_compressor(spec_d.compressor, spec_d.plan.delta,
                                  **spec_d.compressor_kwargs)
 
@@ -400,6 +488,8 @@ class AFLSimulator:
         cache_key = (bkey, P, self._bucket_kcap.get(bkey))
         if cache_key in self._bucket_fns:
             return self._bucket_fns[cache_key]
+        if self._metrics is not None:   # a new (bucket, chunk-shape) compile
+            self._metrics.counter("engine.bucket_compiles").inc()
         _, name, delta, ef, ckw = bkey
         dim = self.dim
         local = self._round_body()
@@ -513,6 +603,13 @@ class AFLSimulator:
         plan = self.controller.update_profile(obs)
         if plan.k == spec.plan.k and plan.delta == spec.plan.delta:
             return
+        if self._tracer is not None:
+            self._tracer.instant(CONTROLLER_TRACK, "replan", t, device=did,
+                                 k_old=spec.plan.k, k_new=plan.k,
+                                 delta_old=spec.plan.delta,
+                                 delta_new=plan.delta)
+        if self._metrics is not None:
+            self._metrics.counter("sim.replans").inc()
         spec.plan = plan
         if self._batched:
             # the stacked loader's queue holds per-step batches, so the new
@@ -536,24 +633,36 @@ class AFLSimulator:
         spec = self.devices[did]
         corrupt = False
         ch_delivered = None
+        compute_end = t + spec.plan.k * spec.profile.alpha \
+            * self._alpha_mult(did, t)
         if self.channel is not None:
             corrupt = self.channel.maybe_corrupt(did)
-            compute_end = t + spec.plan.k * spec.profile.alpha \
-                * self._alpha_mult(did, t)
             arrive, attempts, give_up = self.channel.transmit(
                 did, compute_end, spec.rate * spec.profile.beta)
             ch_delivered = arrive is not None
         else:
             arrive, attempts, give_up = t + self._cycle_span(did, t), 1, None
         in_flight_end = arrive if arrive is not None else give_up
+        crashed, restart_at = False, None
         if self.failure_schedule is not None:
             rec = self.failure_schedule.crash_recovery(did, t, in_flight_end)
             if rec is not None:   # an outage opened mid-flight: upload lost
                 self._crash_lost += 1
-                return None, max(rec, t + 1e-9), attempts, corrupt, \
-                    ch_delivered
-        if arrive is None:
-            return None, give_up, attempts, corrupt, ch_delivered
+                crashed, restart_at = True, max(rec, t + 1e-9)
+        if not crashed and arrive is None:
+            restart_at = give_up
+        m = self._metrics
+        if m is not None:
+            m.counter("sim.cycles").inc()
+            m.counter("sim.upload_attempts").inc(attempts)
+            m.histogram("sim.local_k", _SIZE_BUCKETS).observe(spec.plan.k)
+            m.histogram("sim.compression_density",
+                        _DENSITY_BUCKETS).observe(spec.plan.delta)
+        if self._tracer is not None:
+            self._trace_cycle(did, t, compute_end, arrive, restart_at,
+                              attempts, corrupt, crashed, give_up)
+        if crashed or arrive is None:
+            return None, restart_at, attempts, corrupt, ch_delivered
         return arrive, None, attempts, corrupt, ch_delivered
 
     @staticmethod
@@ -607,20 +716,35 @@ class AFLSimulator:
         for item in order:
             buckets.setdefault(self._bucket_key(self.devices[item[1]]),
                                []).append(item)
+        if self._metrics is not None:
+            m = self._metrics
+            m.histogram("engine.drain_size", _SIZE_BUCKETS).observe(
+                len(starts))
+            m.gauge("engine.buckets").set(len(buckets))
+            occ = m.histogram("engine.bucket_occupancy", _SIZE_BUCKETS)
+            for items in buckets.values():
+                occ.observe(len(items))
         # one host->device model upload per drain: the drain invariant is
         # precisely that no aggregation lands inside it, so every chunk
         # reads the same global model
         flat = jnp.asarray(self.model.w)
         pending = []
-        for bkey, items in buckets.items():
-            pos = 0
-            for size in _chunk_sizes(len(items)):
-                pending.append(self._dispatch_chunk(
-                    bkey, items[pos:pos + size], flat))
-                pos += size
+        chunk_hist = (self._metrics.histogram("engine.chunk_size",
+                                              _SIZE_BUCKETS)
+                      if self._metrics is not None else None)
+        with self._phase("dispatch"):
+            for bkey, items in buckets.items():
+                pos = 0
+                for size in _chunk_sizes(len(items)):
+                    if chunk_hist is not None:
+                        chunk_hist.observe(size)
+                    pending.append(self._dispatch_chunk(
+                        bkey, items[pos:pos + size], flat))
+                    pos += size
         results: dict[int, tuple] = {}
-        for rec in pending:
-            self._collect_chunk(rec, results)
+        with self._phase("collect"):
+            for rec in pending:
+                self._collect_chunk(rec, results)
 
         for t, did, mr, arrive, attempts, corrupt, ch_del in starts:
             update, bits = results[did]
@@ -648,12 +772,14 @@ class AFLSimulator:
             [C.num_keep(self.dim, self.devices[it[1]].plan.delta)
              for it in items], np.int32)
         fn = self._bucket_fn(bkey, B)
-        if bkey[3]:   # error feedback
-            rows = np.asarray([self._rowof[it[1]] for it in items], np.int32)
-            payload, self._res_stack, bits = fn(
-                flat, self._res_stack, rows, batches, seeds, krows)
-        else:
-            payload, bits = fn(flat, batches, seeds, krows)
+        with _prof.annotate("sim.bucket_dispatch"):
+            if bkey[3]:   # error feedback
+                rows = np.asarray([self._rowof[it[1]] for it in items],
+                                  np.int32)
+                payload, self._res_stack, bits = fn(
+                    flat, self._res_stack, rows, batches, seeds, krows)
+            else:
+                payload, bits = fn(flat, batches, seeds, krows)
         return bkey, items, payload, bits
 
     def _collect_chunk(self, rec, results: dict) -> None:
@@ -685,12 +811,20 @@ class AFLSimulator:
         header; "analytic" is the paper's rate·d·32 estimate."""
         spec = self.devices[did]
         if self._wire_mode == "analytic":
-            return spec.rate * self.dim * 32.0
+            bits = spec.rate * self.dim * 32.0
+            if self._metrics is not None:
+                self._metrics.counter("sim.wire_payload_bits").inc(bits)
+            return bits
         bits = float(strict_bits)
+        header = 0.0
         if self._wire_mode == "payload" and C.sparse_wire(
                 spec.compressor, self.dim, spec.plan.delta):
-            bits += C.HEADER_BITS
-        return bits
+            header = float(C.HEADER_BITS)
+        if self._metrics is not None:
+            self._metrics.counter("sim.wire_payload_bits").inc(bits)
+            if header:
+                self._metrics.counter("sim.wire_header_bits").inc(header)
+        return bits + header
 
     # ----------------------------------------------------------- device cycle
     def _device_compute(self, did: int) -> tuple[np.ndarray, Any]:
@@ -796,8 +930,9 @@ class AFLSimulator:
                         did, mr = payload
                         if self.failure_schedule is not None and \
                                 self.failure_schedule.is_down(did, t):
-                            push(self.failure_schedule.recovery_time(did, t),
-                                 "start", (did, self.model.round))
+                            rec = self.failure_schedule.recovery_time(did, t)
+                            self._trace_down(did, t, rec)
+                            push(rec, "start", (did, self.model.round))
                         else:
                             self._maybe_replan(did, t)
                             arrive, restart_at, attempts, corrupt, ch_del = \
@@ -819,18 +954,21 @@ class AFLSimulator:
                         last_t = t
                         self.events_processed += 1
                     if starts:
-                        self._process_starts_batched(starts, push)
+                        with self._phase("heap_drain"):
+                            self._process_starts_batched(starts, push)
                     continue
                 did, mr = payload
                 if self.failure_schedule is not None and \
                         self.failure_schedule.is_down(did, t):
-                    push(self.failure_schedule.recovery_time(did, t), "start",
-                         (did, self.model.round))
+                    rec = self.failure_schedule.recovery_time(did, t)
+                    self._trace_down(did, t, rec)
+                    push(rec, "start", (did, self.model.round))
                     continue
                 self._maybe_replan(did, t)
                 arrive, restart_at, attempts, corrupt, ch_del = \
                     self._schedule_upload(did, t)
-                update, strict_bits = self._device_compute(did)
+                with self._phase("dispatch"):
+                    update, strict_bits = self._device_compute(did)
                 per_upload = self._wire_bits(did, strict_bits)
                 if self.channel is not None and ch_del is not None:
                     self.channel.charge_wire(per_upload, attempts, ch_del)
@@ -845,7 +983,26 @@ class AFLSimulator:
 
             elif kind == "arrival":
                 a: Arrival = payload
-                events = self.agg.on_arrival(t, a)
+                tr = self._tracer
+                if tr is not None:
+                    tr.instant(SERVER_TRACK, "arrival", t,
+                               device=a.device_id, round=a.model_round,
+                               bits=a.wire_bits)
+                if self._metrics is not None:
+                    self._metrics.counter("sim.arrivals").inc()
+                    self._metrics.counter("sim.wire_bits_arrived").inc(
+                        a.wire_bits)
+                san = (getattr(self.agg, "sanitizer", None)
+                       if tr is not None else None)
+                san_before = dict(san.counts) if san is not None else None
+                with self._phase("aggregate"):
+                    events = self.agg.on_arrival(t, a)
+                if san_before is not None:
+                    for cat, n in san.counts.items():
+                        for _ in range(n - san_before[cat]):
+                            tr.instant(SERVER_TRACK, cat, t,
+                                       device=a.device_id)
+                self._trace_agg_events(events)
                 for ev in events:
                     for did in ev.release_to:
                         push(ev.time, "start", (did, self.model.round))
@@ -862,7 +1019,9 @@ class AFLSimulator:
 
             elif kind == "boundary":
                 r = payload
-                events = self.agg.on_round_boundary(t)
+                with self._phase("aggregate"):
+                    events = self.agg.on_round_boundary(t)
+                self._trace_agg_events(events)
                 for ev in events:
                     for did in ev.release_to:
                         push(ev.time, "start", (did, self.model.round))
@@ -876,21 +1035,46 @@ class AFLSimulator:
         # by default and would poison History.time_to_accuracy.
         self._eval(hist, t if heap else last_t)
         hist.counters = self.fault_counters()
+        if self._metrics is not None:
+            # overwrite rather than re-derive: faults.* must equal
+            # History.counters EXACTLY, whatever the engine interleaving
+            self._metrics.merge_totals("faults.", hist.counters)
+            self._metrics.gauge("sim.events_processed").set(
+                self.events_processed)
+            if self._timers is not None:
+                self._timers.export_to(self._metrics)
         return hist
 
     def _eval(self, hist: History, t: float):
-        acc, loss = self._eval_fn(jnp.asarray(self.model.w),
-                                  self.task.test_batch)
+        with self._phase("eval"):
+            acc, loss = self._eval_fn(jnp.asarray(self.model.w),
+                                      self.task.test_batch)
+            acc, loss = float(acc), float(loss)
         # mean staleness over arrivals aggregated since the LAST eval: a
         # fixed last-N slice would mix entries across aggregation rounds.
         window = self.agg.staleness_log[self._stal_ptr:]
         self._stal_ptr = len(self.agg.staleness_log)
+        cnt = self.fault_counters()
+        fault_window = {k: cnt[k] - self._last_counters.get(k, 0)
+                        for k in cnt if cnt[k] != self._last_counters.get(k, 0)}
+        self._last_counters = cnt
+        if self._metrics is not None:
+            h = self._metrics.histogram("sim.staleness", STALENESS_BUCKETS)
+            before = list(h.counts)
+            for s in window:
+                h.observe(s)
+            fault_window["staleness_counts"] = [
+                a - b for a, b in zip(h.counts, before)]
+        if self._tracer is not None:
+            self._tracer.instant(SERVER_TRACK, "eval", t,
+                                 round=int(self.model.round),
+                                 accuracy=acc, loss=loss)
         hist.records.append(Record(
             time=float(t), round=int(self.model.round),
-            accuracy=float(acc), loss=float(loss),
+            accuracy=acc, loss=loss,
             gbits=self.agg.total_bits / 1e9,
             mean_staleness=float(np.mean(window)) if window else 0.0,
-            drops=self.fault_counters()["drops_total"]))
+            drops=cnt["drops_total"], window=fault_window))
 
 
 # ------------------------------------------------------------ device builders

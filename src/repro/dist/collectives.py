@@ -166,18 +166,22 @@ def make_pod_sync(mesh, dim: int, *, rate: float, eta_g: float = 1.0,
                                            inpod_entry, None)
 
         def shard_fn(p_l, d_l, r_l):
-            acc = d_l[0].astype(jnp.float32) + r_l[0].astype(jnp.float32)
-            vals, idx, _, res = ops.compact_shard_topk(
-                acc, budget=budget, interpret=interpret)
-            if has_pod:
-                vals = jax.lax.all_gather(vals, "pod")   # [P, nbl, budget]
-                idx = jax.lax.all_gather(idx, "pod")
-            else:
-                vals, idx = vals[None], idx[None]
-            upd = jnp.zeros((acc.size,), jnp.float32).at[
-                idx.reshape(-1)].add(vals.reshape(-1)) / n_pods
-            return (p_l - eta_g * upd.reshape(acc.shape)).astype(p_l.dtype), \
-                res[None].astype(r_l.dtype)
+            with jax.named_scope("pod_sync.compact_pack"):
+                acc = d_l[0].astype(jnp.float32) + r_l[0].astype(jnp.float32)
+                vals, idx, _, res = ops.compact_shard_topk(
+                    acc, budget=budget, interpret=interpret)
+            with jax.named_scope("pod_sync.all_gather"):
+                if has_pod:
+                    vals = jax.lax.all_gather(vals, "pod")  # [P, nbl, budget]
+                    idx = jax.lax.all_gather(idx, "pod")
+                else:
+                    vals, idx = vals[None], idx[None]
+            with jax.named_scope("pod_sync.scatter_apply"):
+                upd = jnp.zeros((acc.size,), jnp.float32).at[
+                    idx.reshape(-1)].add(vals.reshape(-1)) / n_pods
+                new_p = (p_l - eta_g * upd.reshape(acc.shape)) \
+                    .astype(p_l.dtype)
+            return new_p, res[None].astype(r_l.dtype)
 
         mapped = jax.shard_map(shard_fn, mesh=mesh,
                                in_specs=(pspec, dspec, dspec),
@@ -212,11 +216,14 @@ def make_pod_sync(mesh, dim: int, *, rate: float, eta_g: float = 1.0,
             return out.reshape(n_blocks, blk)
 
         def sync(params, deltas, residuals):
-            acc = deltas.astype(jnp.float32) + residuals.astype(jnp.float32)
-            kept = jax.vmap(compress_dense)(acc, residuals.astype(jnp.float32))
-            new_residuals = acc - kept
-            update = jnp.mean(kept, axis=0)          # Eq. 6 cross-pod reduce
-            return params - eta_g * update, new_residuals
+            with jax.named_scope("pod_sync.dense"):
+                acc = deltas.astype(jnp.float32) \
+                    + residuals.astype(jnp.float32)
+                kept = jax.vmap(compress_dense)(
+                    acc, residuals.astype(jnp.float32))
+                new_residuals = acc - kept
+                update = jnp.mean(kept, axis=0)      # Eq. 6 cross-pod reduce
+                return params - eta_g * update, new_residuals
 
     sync.path = wire
     sync.wire = wire_fmt

@@ -106,11 +106,12 @@ def make_local_round_step(lm, opt, k: int):
             p, s = opt.update(grads, s, p)
             return (p, s), loss
 
-        (p_k, s_k), losses = jax.lax.scan(body, (params, opt_state), batches,
-                                          length=k)
-        delta = jax.tree.map(
-            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
-            params, p_k)
+        with jax.named_scope("local_round"):
+            (p_k, s_k), losses = jax.lax.scan(body, (params, opt_state),
+                                              batches, length=k)
+            delta = jax.tree.map(
+                lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                params, p_k)
         return p_k, s_k, delta, jnp.mean(losses)
 
     return round_fn

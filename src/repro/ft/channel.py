@@ -72,6 +72,12 @@ class LossyChannel:
         self.drift = sorted(drift or [], key=lambda d: d.start)
         self.retry = retry or RetryPolicy()
         self.seed = int(seed)
+        # When a tracer is attached the simulator flips this on; `transmit`
+        # then records each attempt's (start, end, lost) in `last_attempts`
+        # so per-attempt retry spans can be emitted in simulated time. Off
+        # by default — the hot path allocates nothing.
+        self.trace_attempts = False
+        self.last_attempts: list[tuple[float, float, bool]] = []
         self.reset()
 
     def reset(self) -> None:
@@ -80,6 +86,7 @@ class LossyChannel:
         self.counters = {"attempts": 0, "retries": 0, "delivered": 0,
                          "channel_dropped": 0, "corrupted": 0,
                          "retx_bits": 0.0, "lost_bits": 0.0}
+        self.last_attempts = []
 
     # ------------------------------------------------------------- internals
     def _stream(self, device_id: int) -> np.random.RandomState:
@@ -127,6 +134,9 @@ class LossyChannel:
         time; the caller charges `attempts ×` wire bits.
         """
         p = self._prob(self.loss_prob, device_id)
+        trace = self.trace_attempts
+        if trace:
+            self.last_attempts = []
         s = t_ready
         for i in range(self.retry.max_attempts):
             dur = base_upload * self.beta_multiplier(device_id, s)
@@ -135,6 +145,8 @@ class LossyChannel:
                 self.counters["retries"] += 1
             lost = p > 0.0 and bool(
                 self._stream(device_id).random_sample() < p)
+            if trace:
+                self.last_attempts.append((s, s + dur, lost))
             if not lost:
                 self.counters["delivered"] += 1
                 return s + dur, i + 1, s + dur

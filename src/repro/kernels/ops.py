@@ -152,13 +152,14 @@ def compact_shard_topk(acc: jax.Array, *, budget: int,
     """
     if interpret is None:
         interpret = INTERPRET
-    nb, blk = acc.shape
-    acc = acc.astype(jnp.float32)
-    t = solve_threshold(acc.reshape(-1), nb * budget,
-                        coarse_buckets=coarse_buckets,
-                        fine_buckets=fine_buckets, block=block,
-                        interpret=interpret)
-    return compact_blocks(acc, t, budget=budget, interpret=interpret)
+    with jax.named_scope("compact_shard_topk"):
+        nb, blk = acc.shape
+        acc = acc.astype(jnp.float32)
+        t = solve_threshold(acc.reshape(-1), nb * budget,
+                            coarse_buckets=coarse_buckets,
+                            fine_buckets=fine_buckets, block=block,
+                            interpret=interpret)
+        return compact_blocks(acc, t, budget=budget, interpret=interpret)
 
 
 @functools.partial(jax.jit,
@@ -168,5 +169,6 @@ def momentum_update(w: jax.Array, mu: jax.Array, g: jax.Array, *, lr: float,
                     interpret: bool | None = None):
     if interpret is None:
         interpret = INTERPRET
-    return fused_momentum(w, mu, g, lr=lr, momentum=momentum, block=block,
-                          interpret=interpret)
+    with jax.named_scope("fused_momentum"):
+        return fused_momentum(w, mu, g, lr=lr, momentum=momentum,
+                              block=block, interpret=interpret)

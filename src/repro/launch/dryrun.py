@@ -107,7 +107,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *, verbose: bool = True,
 
     import dataclasses as _dc
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     cfg = get_config(arch)
     from repro.configs.base import SHAPES
     sinfo = SHAPES[shape]
@@ -201,7 +201,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *, verbose: bool = True,
 
     # ---- main lowering: full depth, scanned (memory + schedule + timing)
     compiled = lower_one(cfg, use_scan=True)
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
     cost = _cost_dict(compiled.cost_analysis())
@@ -211,7 +211,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *, verbose: bool = True,
     # body ONCE, so flops/bytes/collectives of the scanned layers are under-
     # counted. Lower unrolled 1- and 2-layer variants; the L2−L1 delta is
     # the exact per-layer cost; total = L1 + (L−1)·Δ.
-    t1 = time.time()
+    t1 = time.perf_counter()
     c1 = lower_one(_dc.replace(cfg, n_layers=1), use_scan=False)
     c2 = lower_one(_dc.replace(cfg, n_layers=2), use_scan=False)
     cost1 = _cost_dict(c1.cost_analysis())
@@ -227,7 +227,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *, verbose: bool = True,
     bytes_dev = extrap(cost1.get("bytes accessed", 0.0),
                        cost2.get("bytes accessed", 0.0))
     coll_bytes_dev = extrap(coll1["total_bytes"], coll2["total_bytes"])
-    t_aux = time.time() - t1
+    t_aux = time.perf_counter() - t1
 
     n_dev = 512 if mesh_kind == "multi" else 256
     res = {
@@ -283,7 +283,7 @@ def run_sync_step(arch: str, *, rate: float = 0.01, verbose=True) -> dict:
     from repro.dist.collectives import make_pod_sync
     from repro.launch.mesh import make_production_mesh
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     cfg = get_config(arch)
     dim = cfg.param_count()
     # sharding-aligned 2D layout: n_blocks sharded over the 256 in-pod chips
@@ -307,7 +307,7 @@ def run_sync_step(arch: str, *, rate: float = 0.01, verbose=True) -> dict:
     coll = parse_collectives(compiled.as_text())
     cost = _cost_dict(compiled.cost_analysis())
     res = {"arch": arch, "kind": "fedluck_sync", "rate": rate, "dim": dim_p,
-           "status": "ok", "compile_s": round(time.time() - t0, 1),
+           "status": "ok", "compile_s": round(time.perf_counter() - t0, 1),
            "collectives": coll,
            "flops_per_device": cost.get("flops"),
            "bytes_accessed_per_device": cost.get("bytes accessed")}

@@ -17,6 +17,8 @@ import time
 
 import numpy as np
 
+from repro.obs import log
+
 
 def main(argv=None):
     import jax
@@ -32,7 +34,10 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=24)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress status lines (final JSON still printed)")
     args = ap.parse_args(argv)
+    log.set_quiet(args.quiet)
 
     cfg = get_config(args.arch).smoke()
     if cfg.frontend == "frames":
@@ -49,7 +54,7 @@ def main(argv=None):
     prefill = jax.jit(lm.prefill)
     decode = jax.jit(lm.decode_step)
 
-    served, t0 = [], time.time()
+    served, t0 = [], time.perf_counter()
     while queue:
         prompts = [queue.pop(0) for _ in range(min(B, len(queue)))]
         while len(prompts) < B:                   # pad the last batch
@@ -77,10 +82,10 @@ def main(argv=None):
             tok = jnp.argmax(logits[:, 0, :], -1).astype(jnp.int32)[:, None]
         for row in out:
             served.append(row.tolist())
-        print(f"[serve] batch done: {len(served)}/{args.requests} "
-              f"t={time.time()-t0:.1f}s")
+        log.status(f"[serve] batch done: {len(served)}/{args.requests} "
+                   f"t={time.perf_counter()-t0:.1f}s")
 
-    tput = args.requests * G / (time.time() - t0)
+    tput = args.requests * G / (time.perf_counter() - t0)
     print(json.dumps({"arch": args.arch, "requests": args.requests,
                       "tokens_per_s": round(tput, 1),
                       "sample": served[0][:8]}))

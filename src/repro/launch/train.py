@@ -31,6 +31,32 @@ import time
 
 import numpy as np
 
+from repro.obs import log
+
+
+def make_obs(args):
+    """(tracer, metrics) from --trace-out/--metrics-out, else (None, None)."""
+    tracer = metrics = None
+    if getattr(args, "trace_out", ""):
+        from repro.obs import Tracer
+        tracer = Tracer()
+    if getattr(args, "metrics_out", ""):
+        from repro.obs import MetricsRegistry
+        metrics = MetricsRegistry()
+    return tracer, metrics
+
+
+def export_obs(args, tracer, metrics, extra=None) -> None:
+    """Write the trace/metrics artifacts named by the CLI flags."""
+    if tracer is not None:
+        from repro.obs import PerfettoExporter
+        PerfettoExporter().export(tracer, args.trace_out)
+        log.status(f"[obs] wrote trace: {args.trace_out} "
+                   f"({len(tracer)} events)")
+    if metrics is not None:
+        metrics.to_json(args.metrics_out, extra=extra)
+        log.status(f"[obs] wrote metrics: {args.metrics_out}")
+
 
 # --------------------------------------------------------------------- FL mode
 def fl_ckpt_state(sim) -> dict:
@@ -102,11 +128,12 @@ def run_fl(args) -> dict:
         sanitizer = SanitizerConfig(tau_max=args.tau_max,
                                     clip_norm=args.clip_norm)
 
+    tracer, metrics = make_obs(args)
     sim = AFLSimulator(task, specs, STRATEGY_FOR_METHOD[args.method],
                        round_period=args.round_period, eta_l=args.eta_l,
                        eta_g=args.eta_g, seed=args.seed, client_indices=idx,
                        failure_schedule=failure, channel=channel,
-                       sanitizer=sanitizer)
+                       sanitizer=sanitizer, tracer=tracer, metrics=metrics)
 
     mgr = CheckpointManager(args.ckpt_dir, max_to_keep=2) \
         if args.ckpt_dir else None
@@ -117,12 +144,12 @@ def run_fl(args) -> dict:
             state = mgr.restore(latest)
             restore_fl_state(sim, state)
             start_round = int(state["round"])
-            print(f"[train] resumed from round {start_round}")
+            log.status(f"[train] resumed from round {start_round}")
 
     # run in checkpointed segments so a crash loses at most one segment
     seg = max(1, args.ckpt_every)
     hist_all = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     while sim.model.round < args.rounds:
         target = min(args.rounds, sim.model.round + seg)
         hist = sim.run(total_rounds=target, eval_every=args.eval_every)
@@ -131,14 +158,17 @@ def run_fl(args) -> dict:
             mgr.save(sim.model.round, fl_ckpt_state(sim))
             mgr.wait()
         r = hist.records[-1]
-        print(f"[train] round={sim.model.round} acc={r.accuracy:.3f} "
-              f"sim_t={r.time:.1f}s comm={r.gbits:.3f}Gb "
-              f"wall={time.time()-t0:.0f}s")
+        log.status(f"[train] round={sim.model.round} acc={r.accuracy:.3f} "
+                   f"sim_t={r.time:.1f}s comm={r.gbits:.3f}Gb "
+                   f"wall={time.perf_counter()-t0:.0f}s")
     if not hist_all:
         # resumed at/past the target round: nothing to train, just eval
         hist_all.extend(
             sim.run(total_rounds=sim.model.round, eval_every=1).records)
     final = hist_all[-1]
+    export_obs(args, tracer, metrics,
+               extra={"engine": "batched" if sim._batched else "sequential",
+                      "task": args.task, "method": args.method})
     return {"final_accuracy": final.accuracy, "rounds": sim.model.round,
             "gbits": final.gbits, "sim_time": final.time,
             "fault_counters": sim.fault_counters()}
@@ -188,23 +218,23 @@ def run_datacenter(args) -> dict:
 
     rng = np.random.RandomState(args.seed)
     probe = jax.jit(make_local_round_step(lm, opt, 2))
-    t0 = time.time()
+    t0 = time.perf_counter()
     probe(params[0], opt_states[0], batches_for(2, rng))
-    t1 = time.time()
+    t1 = time.perf_counter()
     out = probe(params[0], opt_states[0], batches_for(2, rng))
     jax.block_until_ready(out[3])
-    alpha = (time.time() - t1) / 2
+    alpha = (time.perf_counter() - t1) / 2
     beta = dim * 32 / args.dcn_bps
     plans = [ctl.register(DeviceProfile(i, alpha * (1 + 0.5 * i), beta))
              for i in range(n_pods)]
-    print("[datacenter] plans:")
-    print(ctl.summary())
+    log.status("[datacenter] plans:")
+    log.status(ctl.summary())
 
     mgr = CheckpointManager(args.ckpt_dir, max_to_keep=2) \
         if args.ckpt_dir else None
 
     comm_bits = 0.0
-    t0 = time.time()
+    t0 = time.perf_counter()
     for step in range(args.steps):
         deltas = []
         losses = []
@@ -235,8 +265,10 @@ def run_datacenter(args) -> dict:
             mgr.save(step + 1, {"w": new_flat})
             mgr.wait()
         if step % 5 == 0 or step == args.steps - 1:
-            print(f"[datacenter] round={step} loss={np.mean(losses):.4f} "
-                  f"comm={comm_bits/8e6:.1f}MB wall={time.time()-t0:.0f}s")
+            log.status(f"[datacenter] round={step} "
+                       f"loss={np.mean(losses):.4f} "
+                       f"comm={comm_bits/8e6:.1f}MB "
+                       f"wall={time.perf_counter()-t0:.0f}s")
     return {"loss": float(np.mean(losses)), "comm_mb": comm_bits / 8e6}
 
 
@@ -287,7 +319,17 @@ def main(argv=None):
     ap.add_argument("--local-k-max", type=int, default=10)
     ap.add_argument("--rate", type=float, default=0.0)
     ap.add_argument("--dcn-bps", type=float, default=100e9)
+    # observability (fl mode)
+    ap.add_argument("--trace-out", default="",
+                    help="write a Perfetto/Chrome trace JSON of the run "
+                         "(open at ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write a metrics snapshot JSON "
+                         "(repro.obs.MetricsRegistry)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress status lines (final JSON still printed)")
     args = ap.parse_args(argv)
+    log.set_quiet(args.quiet)
 
     res = run_fl(args) if args.mode == "fl" else run_datacenter(args)
     print(json.dumps(res, indent=1))

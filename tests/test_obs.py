@@ -1,0 +1,257 @@
+"""Unit tests for the repro.obs subsystem: histogram bucketing, registry
+semantics, tracer records, Perfetto export schema, and validator failure
+modes — plus an end-to-end instrumented mini-simulation."""
+import json
+
+import pytest
+
+from repro.obs import (CONTROLLER_TRACK, NULL_TRACER, SERVER_TRACK,
+                       Histogram, MetricsRegistry, NullTracer,
+                       PerfettoExporter, PhaseTimers, Tracer, device_track,
+                       validate_chrome_trace, validate_metrics_json)
+
+
+class TestHistogram:
+    def test_bucket_edges_inclusive_upper(self):
+        """Bucket i counts bounds[i-1] < v <= bounds[i]."""
+        h = Histogram((0, 1, 2, 4))
+        for v in (-1.0, 0.0):
+            h.observe(v)          # v <= 0 -> bucket 0
+        h.observe(1.0)            # 0 < v <= 1 -> bucket 1
+        h.observe(1.5)            # 1 < v <= 2 -> bucket 2
+        h.observe(4.0)            # 2 < v <= 4 -> bucket 3
+        h.observe(100.0)          # overflow
+        assert h.counts == [2, 1, 1, 1, 1]
+        assert h.count == sum(h.counts) == 6
+        assert h.mean() == pytest.approx((-1 + 0 + 1 + 1.5 + 4 + 100) / 6)
+
+    def test_overflow_bucket_exists(self):
+        h = Histogram((1,))
+        assert len(h.counts) == 2
+        h.observe(2.0)
+        assert h.counts == [0, 1]
+
+    def test_rejects_non_increasing_bounds(self):
+        with pytest.raises(ValueError):
+            Histogram((1, 1, 2))
+        with pytest.raises(ValueError):
+            Histogram(())
+
+
+class TestRegistry:
+    def test_get_or_make_and_snapshot(self):
+        m = MetricsRegistry()
+        m.counter("sim.a").inc()
+        m.counter("sim.a").inc(2.0)
+        m.gauge("engine.g").set(7)
+        m.histogram("sim.h", (1, 2)).observe(1.5)
+        snap = m.snapshot()
+        assert snap["counters"]["sim.a"] == 3.0
+        assert snap["gauges"]["engine.g"] == 7.0
+        assert snap["histograms"]["sim.h"]["counts"] == [0, 1, 0]
+
+    def test_histogram_needs_bounds_on_first_use(self):
+        m = MetricsRegistry()
+        with pytest.raises(ValueError):
+            m.histogram("h")
+        m.histogram("h", (1,))
+        assert m.histogram("h") is m.histogram("h", (5,))  # bounds ignored
+
+    def test_engine_agnostic_strips_engine_and_time(self):
+        m = MetricsRegistry()
+        m.counter("sim.x").inc()
+        m.counter("engine.y").inc()
+        m.counter("time.z_s").inc()
+        snap = m.snapshot(engine_agnostic=True)
+        assert set(snap["counters"]) == {"sim.x"}
+
+    def test_merge_totals_overwrites(self):
+        m = MetricsRegistry()
+        m.counter("faults.drops_total").inc(99)
+        m.merge_totals("faults.", {"drops_total": 3, "retries": 5})
+        snap = m.snapshot()
+        assert snap["counters"]["faults.drops_total"] == 3.0
+        assert snap["counters"]["faults.retries"] == 5.0
+
+
+class TestTracer:
+    def test_span_and_instant_records(self):
+        tr = Tracer()
+        tr.span(device_track(2), "local_round", 1.0, 3.0, k=4)
+        tr.instant(SERVER_TRACK, "arrival", 3.0, device=2)
+        assert len(tr) == 2
+        e = tr.by_name("local_round")[0]
+        assert e.ph == "X" and e.ts == 1.0 and e.dur == 2.0
+        assert e.arg("k") == 4 and e.arg("missing", -1) == -1
+        assert tr.tracks() == [device_track(2), SERVER_TRACK]
+        tr.clear()
+        assert len(tr) == 0
+
+    def test_null_tracer_records_nothing(self):
+        tr = NullTracer()
+        tr.span(SERVER_TRACK, "x", 0, 1)
+        tr.instant(CONTROLLER_TRACK, "y", 0)
+        assert len(tr) == 0 and not tr.enabled
+        assert not NULL_TRACER.enabled
+
+    def test_events_are_order_sensitive_and_comparable(self):
+        a, b = Tracer(), Tracer()
+        a.instant("t", "e1", 0.0)
+        a.instant("t", "e2", 0.0)
+        b.instant("t", "e2", 0.0)
+        b.instant("t", "e1", 0.0)
+        assert a.events != b.events
+        assert sorted(a.events, key=str) == sorted(b.events, key=str)
+
+
+class TestPhaseTimers:
+    def test_phase_accumulates(self):
+        tm = PhaseTimers()
+        with tm.phase("p"):
+            pass
+        with tm.phase("p"):
+            pass
+        tm.add("q", 1.5)
+        snap = tm.snapshot()
+        assert snap["p"]["calls"] == 2 and snap["p"]["seconds"] >= 0
+        assert snap["q"] == {"seconds": 1.5, "calls": 1}
+
+    def test_export_to_metrics(self):
+        tm = PhaseTimers()
+        tm.add("drain", 2.0)
+        m = MetricsRegistry()
+        tm.export_to(m)
+        snap = m.snapshot()
+        assert snap["counters"]["time.drain_s"] == 2.0
+        assert snap["counters"]["time.drain_calls"] == 1.0
+
+
+class TestPerfettoSchema:
+    def _trace(self):
+        tr = Tracer()
+        tr.span(device_track(0), "local_round", 0.0, 0.5, k=2)
+        tr.span(device_track(1), "upload", 0.5, 0.7)
+        tr.instant(SERVER_TRACK, "arrival", 0.7, device=1)
+        tr.instant(CONTROLLER_TRACK, "replan", 0.8, device=0)
+        return tr
+
+    def test_required_keys_on_every_event(self):
+        doc = PerfettoExporter().to_chrome(self._trace())
+        for e in doc["traceEvents"]:
+            for key in ("ph", "ts", "pid", "tid", "name"):
+                assert key in e, (key, e)
+
+    def test_track_layout_and_units(self):
+        doc = PerfettoExporter().to_chrome(self._trace())
+        info = validate_chrome_trace(doc)
+        assert info["events"] == 4
+        assert info["device_tracks"] == ["device 0", "device 1"]
+        assert set(info["tracks"].values()) == {
+            "server", "controller", "device 0", "device 1"}
+        span = next(e for e in doc["traceEvents"]
+                    if e["name"] == "local_round")
+        assert span["ph"] == "X"
+        assert span["ts"] == 0.0 and span["dur"] == pytest.approx(0.5e6)
+        inst = next(e for e in doc["traceEvents"] if e["name"] == "arrival")
+        assert inst["ph"] == "i" and inst["s"] == "t"
+        assert inst["args"] == {"device": 1}
+
+    def test_export_roundtrip(self, tmp_path):
+        path = str(tmp_path / "trace.json")
+        PerfettoExporter().export(self._trace(), path)
+        info = validate_chrome_trace(path)
+        assert info["events"] == 4
+        with open(path) as f:
+            assert json.load(f)["traceEvents"]
+
+    def test_validator_rejects_missing_keys(self):
+        with pytest.raises(ValueError, match="missing required key"):
+            validate_chrome_trace({"traceEvents": [
+                {"ph": "X", "ts": 0, "pid": 1, "name": "x"}]})
+
+    def test_validator_rejects_unknown_phase_and_unlabelled_tid(self):
+        meta = {"ph": "M", "ts": 0, "pid": 1, "tid": 5,
+                "name": "thread_name", "args": {"name": "t"}}
+        with pytest.raises(ValueError, match="unknown phase"):
+            validate_chrome_trace({"traceEvents": [
+                meta, {"ph": "Z", "ts": 0, "pid": 1, "tid": 5, "name": "x"}]})
+        with pytest.raises(ValueError, match="no thread_name"):
+            validate_chrome_trace({"traceEvents": [
+                {"ph": "i", "ts": 0, "pid": 1, "tid": 6, "name": "x"}]})
+
+    def test_validator_rejects_metadata_only(self):
+        with pytest.raises(ValueError, match="only metadata"):
+            validate_chrome_trace({"traceEvents": [
+                {"ph": "M", "ts": 0, "pid": 1, "tid": 0,
+                 "name": "process_name", "args": {"name": "p"}}]})
+
+
+class TestMetricsJson:
+    def test_roundtrip_validates(self, tmp_path):
+        m = MetricsRegistry()
+        m.counter("sim.cycles").inc(4)
+        m.histogram("sim.staleness", (0, 1, 2)).observe(1)
+        path = str(tmp_path / "metrics.json")
+        doc = m.to_json(path, extra={"engine": "batched"})
+        assert doc["schema"] == "repro.obs.metrics/v1"
+        assert validate_metrics_json(path)["engine"] == "batched"
+
+    def test_multi_engine_layout(self):
+        m = MetricsRegistry()
+        m.counter("sim.cycles").inc()
+        doc = {"schema": "repro.obs.metrics/v1",
+               "batched": m.snapshot(), "sequential": m.snapshot()}
+        validate_metrics_json(doc)
+
+    def test_rejects_histogram_count_mismatch(self):
+        doc = {"counters": {}, "gauges": {}, "histograms": {
+            "h": {"bounds": [1], "counts": [1, 2], "count": 5, "sum": 0}}}
+        with pytest.raises(ValueError, match="do not sum"):
+            validate_metrics_json(doc)
+
+    def test_rejects_wrong_bucket_arity(self):
+        doc = {"counters": {}, "gauges": {}, "histograms": {
+            "h": {"bounds": [1, 2], "counts": [1, 1], "count": 2, "sum": 0}}}
+        with pytest.raises(ValueError, match="len"):
+            validate_metrics_json(doc)
+
+
+class TestEndToEnd:
+    def test_instrumented_mini_sim_trace_validates(self, tmp_path):
+        """A tiny instrumented run exports a loadable trace with per-device
+        tracks plus server metadata, and a valid metrics snapshot."""
+        from repro.core.controller import DeviceProfile
+        from repro.core.factor import Plan
+        from repro.core.simulator import AFLSimulator, DeviceSpec
+        from repro.models.small import make_task
+
+        task = make_task("mlp_micro", num_samples=200, test_samples=60,
+                         batch_size=16)
+        specs = []
+        for did in range(2):
+            p = DeviceProfile(did, 0.02 * (1 + did), 2.0)
+            specs.append(DeviceSpec(p, Plan(2, 0.2, 0.0,
+                                            2 * p.alpha + 0.2 * p.beta, 1),
+                                    "topk", did == 0))
+        tracer, metrics = Tracer(), MetricsRegistry()
+        sim = AFLSimulator(task, specs, "periodic", round_period=1.0, seed=0,
+                           engine="batched", tracer=tracer, metrics=metrics)
+        hist = sim.run(total_rounds=3, eval_every=1)
+        sim.close()
+
+        trace_path = str(tmp_path / "trace.json")
+        PerfettoExporter().export(tracer, trace_path)
+        info = validate_chrome_trace(trace_path)
+        assert info["device_tracks"] == ["device 0", "device 1"]
+        assert info["events"] == len(tracer)
+        assert tracer.by_name("local_round") and tracer.by_name("eval")
+
+        metrics_path = str(tmp_path / "metrics.json")
+        metrics.to_json(metrics_path)
+        validate_metrics_json(metrics_path)
+        snap = metrics.snapshot()
+        assert snap["counters"]["sim.cycles"] > 0
+        for k, v in hist.counters.items():
+            assert snap["counters"][f"faults.{k}"] == float(v)
+        # per-eval-window staleness counts ride on Record.window
+        assert any("staleness_counts" in r.window for r in hist.records)

@@ -199,6 +199,95 @@ class TestFaultEquivalence:
         assert b["records"] == s["records"]
 
 
+def _obs_fault_run(task, engine, *, obs=True, channel=True, controller=True,
+                   rounds=8):
+    """Fault-injected fleet with (optionally) a Tracer + MetricsRegistry
+    attached; returns weights/records plus the obs artifacts."""
+    from repro.obs import MetricsRegistry, Tracer
+    from repro.core.aggregation import SanitizerConfig
+    from repro.core.controller import FedLuckController
+    from repro.ft import (BandwidthDrift, FailureSchedule, LossyChannel,
+                          StragglerDrift)
+    kwargs = {"failure_schedule": FailureSchedule.random(
+        4, 12.0, rate_per_device=1.0, mean_downtime=0.6, seed=4)}
+    if channel:
+        kwargs["channel"] = LossyChannel(
+            loss_prob=0.3, corrupt_prob=0.1,
+            drift=[BandwidthDrift(1, 2.0, 3.0)], seed=7)
+        kwargs["sanitizer"] = SanitizerConfig(tau_max=8)
+    if controller:
+        kwargs["controller"] = FedLuckController(1.0, (1, 8), (0.05, 1.0))
+        kwargs["stragglers"] = [StragglerDrift(2, 3.0, 4.0)]
+    tracer = Tracer() if obs else None
+    metrics = MetricsRegistry() if obs else None
+    sim = AFLSimulator(task, _mixed_fleet(), "periodic", round_period=1.0,
+                       seed=3, engine=engine, tracer=tracer, metrics=metrics,
+                       **kwargs)
+    h = sim.run(total_rounds=rounds, eval_every=2)
+    out = {
+        "w": np.asarray(sim.model.w).copy(),
+        "records": [(r.time, r.round, r.accuracy, r.loss, r.gbits,
+                     r.mean_staleness, r.drops) for r in h.records],
+        "windows": [r.window for r in h.records],
+        "counters": dict(h.counters),
+        "tracer": tracer,
+        "metrics": metrics,
+    }
+    sim.close()
+    return out
+
+
+class TestObsEquivalence:
+    """Observability correctness gate: both engines must emit IDENTICAL
+    event sequences and engine-agnostic metrics on identical fault-injected
+    runs — and attaching obs must not perturb the simulation at all."""
+
+    def test_identical_event_sequences(self, task):
+        b = _obs_fault_run(task, "batched")
+        s = _obs_fault_run(task, "sequential")
+        assert b["tracer"].events == s["tracer"].events
+        assert len(b["tracer"]) > 0
+        names = {e.name for e in b["tracer"].events}
+        # the fault machinery actually showed up in the trace
+        assert {"local_round", "upload", "eval", "arrival",
+                "aggregate"} <= names
+        assert "crash_lost" in names          # crash markers
+        assert "upload_retry" in names        # channel retry spans
+        assert "replan" in names              # controller re-plans
+
+    def test_identical_engine_agnostic_metrics(self, task):
+        b = _obs_fault_run(task, "batched")
+        s = _obs_fault_run(task, "sequential")
+        assert (b["metrics"].snapshot(engine_agnostic=True)
+                == s["metrics"].snapshot(engine_agnostic=True))
+        # engine internals exist only on the batched side
+        eng = b["metrics"].snapshot()
+        assert eng["histograms"]["engine.drain_size"]["count"] > 0
+
+    def test_faults_metrics_match_history_counters(self, task):
+        for eng in ("batched", "sequential"):
+            out = _obs_fault_run(task, eng)
+            counters = out["metrics"].snapshot()["counters"]
+            for k, v in out["counters"].items():
+                assert counters[f"faults.{k}"] == float(v), (eng, k)
+
+    def test_obs_attachment_leaves_run_bitwise_unchanged(self, task):
+        with_obs = _obs_fault_run(task, "batched", obs=True)
+        without = _obs_fault_run(task, "batched", obs=False)
+        assert np.array_equal(with_obs["w"], without["w"])
+        assert with_obs["records"] == without["records"]
+        assert with_obs["counters"] == without["counters"]
+
+    def test_record_windows_attribute_faults_per_eval(self, task):
+        out = _obs_fault_run(task, "batched")
+        windows = out["windows"]
+        # window deltas over non-monotonic-free counters sum back to the
+        # cumulative totals (every key of the final counter block)
+        for key, total in out["counters"].items():
+            assert sum(w.get(key, 0) for w in windows) == total, key
+        assert any("staleness_counts" in w for w in windows)
+
+
 class TestSatellites:
     def test_qsgd_rate_derived_from_levels(self):
         p = DeviceProfile(0, 0.01, 1.0)

@@ -1,6 +1,7 @@
 """End-to-end behaviour tests for the paper's system: FedLuck's claims hold
 qualitatively on the simulator (joint adaptation beats fixed settings and
 single-factor optimization), and the full train driver restarts cleanly."""
+import json
 import os
 import subprocess
 import sys
@@ -106,7 +107,9 @@ class TestDrivers:
                             capture_output=True, text=True, env=env,
                             timeout=600)
         assert r2.returncode == 0, r2.stderr[-2000:]
-        assert "resumed from round" in r2.stdout
+        # status lines go to stderr (repro.obs.log) so stdout stays JSON
+        assert "resumed from round" in r2.stderr
+        assert json.loads(r2.stdout)["rounds"] == 12
 
     def test_serve_cli(self):
         env = dict(os.environ, PYTHONPATH=SRC)
